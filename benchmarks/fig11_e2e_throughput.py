@@ -1,0 +1,138 @@
+"""Fig. 11/12: end-to-end serving throughput, W4AxKV4 vs baselines.
+
+Two parts:
+
+(a) **Derived throughput model** (the paper's A100-80G experiment mapped
+    to one v5e pod slice with the same memory budget): for each precision
+    config, the max decode batch is what fits the memory budget after
+    weights, and throughput = batch / step_time(batch) where step_time is
+    the decode roofline (weights + KV bytes per token — decode is
+    memory-bound). Input/output lengths follow the paper (1024/512 and
+    128/128).
+
+(b) **Measured engine throughput** on the tiny smoke model (CPU): real
+    tokens/s of the continuous-batching engine for KV16 vs KV4 page
+    budgets, showing KV4 admits ~4× the batch.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import hw
+from repro.configs.base import get_config, get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.engine import Engine, EngineConfig
+
+MODELS = ["llama3_8b", "mistral_nemo_12b", "llama3_70b", "qwen2_72b"]
+MEM_BUDGET = 80e9           # paper: single A100-80G
+CONFIGS = {
+    #            w_bits a_bits kv_bits
+    "W16A16":   (16, 16, 16),
+    "W8A8":     (8, 8, 8),
+    "W4A16":    (4, 16, 16),
+    "W4AxKV4":  (4, 4.5, 4),   # 87.5 % A4 + 12.5 % A8 → 4.5 eff. bits
+}
+
+
+def decode_step_time(cfg, batch, ctx_len, w_bits, a_bits, kv_bits):
+    """Memory-bound decode step: stream weights once + KV per sequence."""
+    n_active = cfg.active_param_count()
+    w_bytes = n_active * w_bits / 8
+    kv_bytes_per_seq = (2 * cfg.num_layers * cfg.kv_dim * ctx_len
+                        * kv_bits / 8)
+    act_bytes = batch * cfg.d_model * cfg.num_layers * 12 * a_bits / 8
+    t_mem = (w_bytes + batch * kv_bytes_per_seq + act_bytes) / hw.HBM_BW
+    flops = 2.0 * n_active * batch
+    t_cmp = flops / (hw.PEAK_INT8 if max(w_bits, a_bits) <= 8
+                     else hw.PEAK_BF16)
+    return max(t_mem, t_cmp)
+
+
+def max_batch(cfg, ctx_len, w_bits, kv_bits, budget=MEM_BUDGET):
+    w_bytes = cfg.param_count() * w_bits / 8
+    kv_per_seq = 2 * cfg.num_layers * cfg.kv_dim * ctx_len * kv_bits / 8
+    free = budget - w_bytes - 2e9          # 2 GB activations/runtime
+    if free <= 0:
+        return 0
+    return max(0, int(free // kv_per_seq))
+
+
+def derived_table(in_len, out_len, verbose=True):
+    ctx = in_len + out_len
+    rel_rows = {}
+    for model in MODELS:
+        cfg = get_config(model)
+        tput = {}
+        for name, (wb, ab, kb) in CONFIGS.items():
+            b = max_batch(cfg, ctx, wb, kb)
+            if b == 0:
+                tput[name] = 0.0
+                continue
+            t = decode_step_time(cfg, b, ctx, wb, ab, kb)
+            tput[name] = b / t
+        base = tput["W4A16"] or 1.0
+        rel = {k: v / base for k, v in tput.items()}
+        rel_rows[model] = rel
+        if verbose:
+            bb = {k: max_batch(cfg, ctx, v[0], v[2])
+                  for k, v in CONFIGS.items()}
+            print(f"{model:16s} " + "  ".join(
+                f"{k}:{rel[k]:5.2f}×(b={bb[k]})" for k in CONFIGS))
+    return rel_rows
+
+
+def measured_engine(verbose=True):
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(int4_fraction=0.875, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    results = {}
+    # same page-memory budget: KV4 gets 4× the pages of KV16 per byte —
+    # emulate by giving the KV16-equivalent run 1/4 the pages.
+    for name, pages in (("KV16-budget", 16), ("KV4-budget", 64)):
+        eng = Engine(cfg, qparams, qc, EngineConfig(
+            max_batch=8, num_pages=pages, page_size=16))
+        for i in range(8):
+            eng.add_request(i, list(range(1, 17)), 16)
+        t0 = time.time()
+        eng.run(max_steps=400)
+        dt = time.time() - t0
+        results[name] = {
+            "tok_s": eng.tokens_generated / dt,
+            "preemptions": eng.sched.preemptions,
+            "steps": eng.steps,
+        }
+        if verbose:
+            print(f"engine {name:12s}: {results[name]['tok_s']:7.1f} tok/s "
+                  f"steps={eng.steps} preemptions={eng.sched.preemptions}")
+    return results
+
+
+def main():
+    t0 = time.time()
+    print("\n== Fig. 11 proxy: derived e2e throughput vs W4A16 "
+          "(80 GB budget) ==")
+    print("--- in/out 1024/512 ---")
+    rel_long = derived_table(1024, 512)
+    print("--- in/out 128/128 ---")
+    rel_short = derived_table(128, 128)
+    print("\n== measured engine (tiny model, equal page-byte budget) ==")
+    meas = measured_engine()
+    dt = time.time() - t0
+    mean_long = float(np.mean([r["W4AxKV4"] for r in rel_long.values()]))
+    mean_short = float(np.mean([r["W4AxKV4"] for r in rel_short.values()]))
+    print(f"(paper: 2.02× @1024/512, 1.63× @128/128 over TRT-LLM-W4A16)")
+    print(f"fig11_e2e_throughput,{dt*1e6:.0f},"
+          f"w4axkv4_vs_w4a16_long={mean_long:.2f}x;"
+          f"short={mean_short:.2f}x;"
+          f"engine_kv4_vs_kv16="
+          f"{meas['KV4-budget']['tok_s']/max(meas['KV16-budget']['tok_s'],1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

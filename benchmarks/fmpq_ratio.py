@@ -1,0 +1,111 @@
+"""§3.2 claim: ">84 % of GEMM computations use W4A4" after channel
+permutation, "<20 % of blocks need 8-bit".
+
+We measure the INT4 block fraction of FMPQ plans built from real
+calibration statistics of a trained tiny LM (captured by instrumenting
+the linear layer), plus a synthetic LLM-like activation model
+(heavy-tailed outlier channels, the Fig. 3 distribution).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fmpq
+from repro.configs.base import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.layers import common as C
+from repro.models.lm import LM
+from repro.training import optimizer as OPT
+from repro.training.train_loop import make_train_step
+
+
+def collect_linear_stats(lm, params, batch):
+    """Eager per-layer forward recording per-linear input channel absmax
+    (the lax.scan path traces its body, so calibration uses an unrolled
+    layer loop — exactly what the offline calibration pass would do)."""
+    from repro.layers import attention as ATT
+    from repro.layers import mlp as MLP
+    cfg = lm.cfg
+    stats = {}
+
+    def record(name, x):
+        am = np.asarray(
+            jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0), np.float64)
+        stats[name] = np.maximum(stats.get(name, 0.0), am)
+
+    x = lm._embed(params, batch["tokens"])
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for li in range(cfg.num_layers):
+        bp = jax.tree.map(lambda a: a[li], params["blocks"])
+        h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+        record(f"L{li}.qkv_in", h)
+        x = x + ATT.attention_train(bp["attn"], cfg, h, positions)
+        h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+        record(f"L{li}.ffn_in", h)
+        x = x + MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+    return stats
+
+
+def synthetic_llm_activations(rng, n_ch=4096, n_outlier=30, mag=80.0):
+    absmax = rng.lognormal(0.0, 0.4, size=n_ch)
+    idx = rng.choice(n_ch, n_outlier, replace=False)
+    absmax[idx] *= mag
+    return absmax
+
+
+def run():
+    t0 = time.time()
+    rows = []
+
+    # (a) trained tiny LM calibration
+    cfg = get_smoke_config("llama3_8b")
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    opt = OPT.adamw_init(params)
+    step = jax.jit(make_train_step(lm, OPT.AdamWConfig(lr=2e-3)))
+    data = SyntheticLMData(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=8))
+    for i in range(30):
+        params, opt, _ = step(params, opt, data.batch_for_step(i))
+    stats = collect_linear_stats(lm, params, data.batch_for_step(500))
+    for name, absmax in stats.items():
+        if absmax.shape[0] % 128:
+            continue
+        plan = fmpq.plan_fmpq(absmax)
+        rows.append((f"tinyLM.{name}", plan.int4_fraction))
+
+    # (b) synthetic LLaMA-like activations (Fig. 3 regime), many trials
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        absmax = synthetic_llm_activations(
+            rng, n_outlier=int(rng.integers(8, 64)))
+        plan = fmpq.plan_fmpq(absmax)
+        unperm = fmpq.identify_outlier_channels(absmax).reshape(
+            -1, 128).any(1).mean()
+        rows.append((f"llm-like-{trial}", plan.int4_fraction))
+        rows.append((f"llm-like-{trial}-unpermuted", 1.0 - float(unperm)))
+
+    dt = time.time() - t0
+    return rows, dt
+
+
+def main():
+    rows, dt = run()
+    print("\n== FMPQ INT4-block fraction (paper: ≥84 % W4A4) ==")
+    for name, frac in rows:
+        print(f"{name:32s} int4_fraction={frac:.3f}")
+    llm_like = [f for n, f in rows
+                if n.startswith("llm-like") and "unperm" not in n]
+    mean_frac = float(np.mean(llm_like))
+    print(f"fmpq_ratio,{dt*1e6:.0f},mean_llm_like_int4={mean_frac:.3f};"
+          f"paper_claim=0.84;ok={mean_frac >= 0.84}")
+
+
+if __name__ == "__main__":
+    main()

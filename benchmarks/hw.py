@@ -1,0 +1,52 @@
+"""TPU v5e hardware constants (the dry-run target) + roofline helpers."""
+
+PEAK_BF16 = 197e12          # FLOP/s per chip
+PEAK_INT8 = 394e12          # int8 OPS per chip (2× bf16 on the MXU)
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+CHIP_HBM = 16e9             # bytes per chip (v5e 16 GB)
+
+# A100-80G constants — used only to sanity-map the paper's Fig. 9 claims.
+A100_FP16 = 312e12
+A100_INT8 = 624e12
+A100_INT4 = 1248e12
+A100_HBM = 2.0e12
+
+
+def compute_time(flops: float, chips: int = 1, int8: bool = False) -> float:
+    peak = PEAK_INT8 if int8 else PEAK_BF16
+    return flops / (chips * peak)
+
+
+def memory_time(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * HBM_BW)
+
+
+def collective_time(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * ICI_BW)
+
+
+def gemm_roofline_latency(m: int, k: int, n: int, *,
+                          w_bits: int, a_bits: int,
+                          out_bytes: int = 4, scale_overhead: float = 0.0,
+                          int_mxu: bool = True) -> dict:
+    """Single-chip GEMM latency model: max(compute, memory) + terms.
+
+    ``scale_overhead`` adds per-group dequant metadata bytes (f32 scales
+    per 128-group). int_mxu: int8-rate MXU when both operands ≤ 8 bit.
+    """
+    flops = 2.0 * m * k * n
+    use_int8 = int_mxu and w_bits <= 8 and a_bits <= 8
+    t_c = compute_time(flops, int8=use_int8)
+    w_bytes = k * n * w_bits / 8 * (1 + scale_overhead)
+    a_bytes = m * k * a_bits / 8 * (1 + scale_overhead)
+    o_bytes = m * n * out_bytes
+    t_m = memory_time(w_bytes + a_bytes + o_bytes)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "latency_s": max(t_c, t_m),
+        "bound": "compute" if t_c > t_m else "memory",
+        "bytes": w_bytes + a_bytes + o_bytes,
+        "flops": flops,
+    }

@@ -1,0 +1,202 @@
+"""§Roofline: turn dry-run records into the three-term roofline table.
+
+  compute term    = HLO_FLOPs / (chips × peak)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+Caveat (documented in EXPERIMENTS.md): XLA:CPU cost_analysis does not
+count integer-MXU dot ops as "flops", so for the quantized serving cells
+the compute term is also derived analytically from MODEL_FLOPS
+(6·N·D train / 2·N_active·tokens serve) — we report both and take the
+max as the effective compute term.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from benchmarks import hw
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES, get_config  # noqa: E402
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS for the whole step (global, all chips)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def ideal_bytes_per_device(arch: str, shape_name: str, mesh: str) -> float:
+    """Analytic minimum HBM traffic per device for one step (the fused
+    Pallas-kernel dataflow: packed weights + packed KV + small acts).
+
+    Used for the *attainment* column: the as-compiled dry-run lowers the
+    portable jnp reference path, which materializes dequantized int4
+    operands (u8→f32 converts) that the TPU Pallas kernels keep in VMEM —
+    so cost_analysis bytes overstate the target kernel's traffic and the
+    ideal-bytes ratio bounds what kernel-level fusion recovers.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = MESH_CHIPS[mesh]
+    model_par = 16
+    data_par = chips // model_par
+    b_dev = max(1, shape.global_batch // data_par)
+
+    if shape.kind == "train":
+        # params f32 + grads + adam m/v (read+write) sharded over all chips
+        n = cfg.param_count()
+        param_traffic = n * (4 + 4 + 4 * 4) / chips
+        tokens_dev = shape.global_batch * shape.seq_len / data_par
+        act_traffic = (cfg.num_layers * tokens_dev * cfg.d_model * 2 * 8
+                       / model_par)
+        return param_traffic + act_traffic
+
+    n_active = cfg.active_param_count()
+    w = n_active * 0.515 / model_par           # int4 + group scales
+    head = cfg.vocab_size * cfg.d_model * 4 / model_par  # fp head+embed
+    toks = b_dev * (shape.seq_len if shape.kind == "prefill" else 1)
+    kv = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        t_eff = shape.seq_len
+        kv = (b_dev * t_eff * cfg.kv_dim * 2 * 0.5
+              * cfg.num_layers)
+        if shape.global_batch == 1:
+            kv /= data_par                      # seq-parallel cache
+    elif cfg.family == "hybrid":
+        t_eff = shape.seq_len
+        groups = cfg.num_layers // cfg.attn_period
+        kv = b_dev * t_eff * cfg.kv_dim * 2 * 0.5 * groups
+        if shape.global_batch == 1:
+            kv /= data_par
+        d_in = cfg.ssm_expand * cfg.d_model
+        kv += (cfg.num_layers * b_dev * (d_in // cfg.ssm_head_dim)
+               * cfg.ssm_state * cfg.ssm_head_dim * 4 * 2)
+    elif cfg.family == "ssm":
+        d = cfg.d_model
+        kv = cfg.num_layers * b_dev * (d // cfg.rwkv_head_dim) \
+            * cfg.rwkv_head_dim ** 2 * 4 * 2
+    act = toks * cfg.d_model * cfg.num_layers * 4 * 2 / model_par
+    if shape.kind == "prefill":
+        return w + head + kv + act
+    return w + head + kv + act
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = MESH_CHIPS[rec["mesh"]]
+    # cost_analysis on the SPMD module is per-device
+    flops_dev = rec["flops"]
+    bytes_dev = rec["bytes_accessed"]
+    coll_bytes_dev = rec["collectives"]["total_bytes"]
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_per_chip = mf / chips
+    int8_frac = 0.0 if rec["kind"] == "train" else 0.9
+    peak = hw.PEAK_BF16 * (1 - int8_frac) + hw.PEAK_INT8 * int8_frac
+
+    t_compute_hlo = flops_dev / hw.PEAK_BF16
+    t_compute_model = mf_per_chip / peak
+    t_compute = max(t_compute_hlo, t_compute_model)
+    t_memory = bytes_dev / hw.HBM_BW
+    t_coll = coll_bytes_dev / hw.ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_total = max(terms.values())
+    useful = mf_per_chip / max(flops_dev, mf_per_chip, 1.0)
+    ideal_by = ideal_bytes_per_device(rec["arch"], rec["shape"], rec["mesh"])
+    t_ideal = max(t_compute_model, ideal_by / hw.HBM_BW)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_compute, "compute_hlo_s": t_compute_hlo,
+        "compute_model_s": t_compute_model,
+        "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "step_s": t_total,
+        "model_flops_global": mf,
+        "useful_flops_ratio": useful,
+        "ideal_bytes_gb": ideal_by / 1e9,
+        "ideal_step_s": t_ideal,
+        "attainment": t_ideal / t_total if t_total > 0 else 0.0,
+        "roofline_fraction": (
+            t_compute_model / t_total if t_total > 0 else 0.0),
+        "hbm_gb_per_device": rec["memory"]["argument_bytes"] / 1e9,
+    }
+
+
+def load_records(dir_: str, mesh: str | None = None,
+                 schedule: str = "split"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        if rec.get("schedule", "split") != schedule:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def fmt_time(s: float) -> str:
+    if s >= 1:
+        return f"{s:7.2f}s "
+    if s >= 1e-3:
+        return f"{s*1e3:7.2f}ms"
+    return f"{s*1e6:7.1f}us"
+
+
+def print_table(rows, file=sys.stdout):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute':9s} "
+           f"{'memory':9s} {'collective':10s} {'dominant':10s} "
+           f"{'attain%':8s} {'useful%':8s} {'HBM GB':7s}")
+    print(hdr, file=file)
+    print("-" * len(hdr), file=file)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{fmt_time(r['compute_s'])} {fmt_time(r['memory_s'])} "
+              f"{fmt_time(r['collective_s'])}  {r['dominant']:10s} "
+              f"{100*r['attainment']:7.1f}% "
+              f"{100*r['useful_flops_ratio']:7.1f}% "
+              f"{r['hbm_gb_per_device']:6.2f}", file=file)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--schedule", default="split")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    rows = [analyze_record(r)
+            for r in load_records(args.dir, args.mesh, args.schedule)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print_table(rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

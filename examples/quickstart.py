@@ -1,0 +1,32 @@
+"""Quickstart: build a model, PTQ-quantize it (FMPQ W4AxKV4), generate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+
+# 1. a small llama-family model (any of the 12 archs works: --arch ids)
+cfg = get_smoke_config("llama3_8b")
+lm_fp = LM(cfg)
+params, axes = lm_fp.init(jax.random.PRNGKey(0))
+print(f"model: {cfg.name}  params ≈ {cfg.param_count()/1e6:.1f}M")
+
+# 2. offline PTQ: pack weights to int4, 87.5 % of activation blocks INT4
+quant = QuantConfig(int4_fraction=0.875, impl="auto", kv4=True)
+lm = LM(cfg, quant=quant)
+qparams, _ = lm.quantize(params, axes)
+
+# 3. serve: prefill a prompt, then decode greedily over the int4 KV cache
+prompt = jnp.asarray([[1, 42, 7, 99, 5]], jnp.int32)
+cache = lm.init_cache(batch=1, max_len=64)
+logits, cache = jax.jit(lm.prefill)(qparams, prompt, cache)
+tokens = [int(jnp.argmax(logits[0, -1]))]
+decode = jax.jit(lm.decode)
+for _ in range(10):
+    logits, cache = decode(
+        qparams, jnp.asarray([[tokens[-1]]], jnp.int32), cache)
+    tokens.append(int(jnp.argmax(logits[0, -1])))
+print("generated:", tokens)

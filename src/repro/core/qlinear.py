@@ -1,0 +1,193 @@
+"""QLinear — the W4Ax linear layer (COMET's serving-path projection).
+
+Offline: :func:`quantize_linear` turns a fp [K, N] weight into the packed
+W4 payload using an FMPQ plan (channel permutation + tail-clustered INT8
+blocks). Online: :func:`qlinear_apply` permutes the incoming activation,
+quantizes the INT4/INT8 channel ranges on the fly (fused act-quant
+kernel), and runs the W4Ax GEMM.
+
+Scan-compatibility: inside `lax.scan` over layers every layer must share
+K4, so the model-level serving path uses a *global* int4 fraction
+(config knob, default 0.875 ≈ the paper's measured 84–92 % W4A4). The
+per-layer calibrated plans are used by the (non-scanned) serving engine
+and the accuracy benchmarks.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fmpq
+from repro.core import quantizer as Q
+from repro.kernels import ops
+from repro.layers import common as _common
+from repro.layers.common import Annotated
+
+BLOCK_K = fmpq.BLOCK_K
+
+__all__ = [
+    "QLinearSpec",
+    "QuantRuntime",
+    "quant_runtime",
+    "quantize_linear",
+    "qlinear_apply",
+    "quantize_linear_fraction",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRuntime:
+    """Trace-time knobs for dispatched quantized projections."""
+
+    int4_fraction: float = 0.875
+    schedule: str = "split"
+    impl: str = "auto"
+    weight_only: bool = False    # W4A16: dequantize W, keep activations fp
+
+
+_ACTIVE_RUNTIME = QuantRuntime()
+
+
+@contextlib.contextmanager
+def quant_runtime(rt: QuantRuntime):
+    """Set the active runtime while tracing a quantized model."""
+    global _ACTIVE_RUNTIME
+    prev = _ACTIVE_RUNTIME
+    _ACTIVE_RUNTIME = rt
+    try:
+        yield
+    finally:
+        _ACTIVE_RUNTIME = prev
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinearSpec:
+    """Static metadata for one quantized projection (not traced)."""
+
+    k: int
+    n: int
+    k4: int                      # leading channels in W4A4 (multiple of 128)
+    has_perm: bool = True
+    schedule: str = "split"      # split | mixed (paper baseline)
+    impl: str = "auto"
+
+    @property
+    def k8(self) -> int:
+        return self.k - self.k4
+
+
+def quantize_linear(
+    w: jax.Array,
+    plan: fmpq.FMPQPlan,
+    config: fmpq.FMPQConfig = fmpq.FMPQConfig(),
+    *,
+    schedule: str = "split",
+    impl: str = "auto",
+):
+    """fp [K, N] weight + calibrated plan → (qparams, spec)."""
+    k, n = w.shape
+    qt = fmpq.apply_fmpq_to_weight(w, plan, config)
+    qparams = {
+        "w_packed": Annotated(qt.data, ("embed", "mlp")),
+        "w_scale": Annotated(qt.scale, ("embed", "mlp")),
+        "perm": Annotated(jnp.asarray(plan.perm, jnp.int32), ("embed",)),
+    }
+    spec = QLinearSpec(k=k, n=n, k4=plan.k4, has_perm=True,
+                       schedule=schedule, impl=impl)
+    return qparams, spec
+
+
+def quantize_linear_fraction(
+    w: jax.Array,
+    int4_fraction: float = 0.875,
+    config: fmpq.FMPQConfig = fmpq.FMPQConfig(),
+    *,
+    schedule: str = "split",
+    impl: str = "auto",
+):
+    """Plan-free variant with a fixed INT4 fraction (scan-uniform).
+
+    Channels are ordered by a synthetic identity permutation; the INT8
+    tail covers the trailing ceil((1-f)·K/128) blocks. Used for the
+    scanned dry-run serving path where per-layer calibration data is not
+    part of the lowering.
+    """
+    k, n = w.shape
+    nb = k // BLOCK_K
+    nb4 = int(round(int4_fraction * nb))
+    nb4 = max(0, min(nb, nb4))
+    qt = Q.quantize_weight_int4(w, group_size=config.weight_group_size,
+                                clip_ratio=config.weight_clip_ratio)
+    qparams = {
+        "w_packed": Annotated(qt.data, ("embed", "mlp")),
+        "w_scale": Annotated(qt.scale, ("embed", "mlp")),
+    }
+    spec = QLinearSpec(k=k, n=n, k4=nb4 * BLOCK_K, has_perm=False,
+                       schedule=schedule, impl=impl)
+    return qparams, spec
+
+
+def qlinear_apply(spec: QLinearSpec, qparams, x: jax.Array) -> jax.Array:
+    """x: [..., K] float → [..., N] (activation dtype preserved)."""
+    in_dtype = x.dtype
+    if spec.has_perm:
+        x = jnp.take(x, qparams["perm"], axis=-1)
+    x4 = x[..., : spec.k4]
+    x8 = x[..., spec.k4 :]
+
+    lead = x.shape[:-1]
+    if spec.k4 > 0:
+        a4, s4 = ops.act_quant(x4, bits=4, impl=spec.impl)
+    else:
+        a4 = jnp.zeros((*lead, 0), jnp.uint8)
+        s4 = jnp.zeros((*lead, 0), jnp.float32)
+    if spec.k8 > 0:
+        a8, s8 = ops.act_quant(x8, bits=8, impl=spec.impl)
+    else:
+        a8 = jnp.zeros((*lead, 0), jnp.int8)
+        s8 = jnp.zeros((*lead, 0), jnp.float32)
+
+    out = ops.w4ax_matmul(
+        a4, s4, a8, s8,
+        qparams["w_packed"], qparams["w_scale"],
+        schedule=spec.schedule, impl=spec.impl,
+    )
+    if "b" in qparams:
+        out = out + qparams["b"]
+    return out.astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# C.linear dispatch handler: any params dict carrying "w_packed" routes here
+# ---------------------------------------------------------------------------
+
+def _dispatch_qlinear(params, x):
+    rt = _ACTIVE_RUNTIME
+    kp = params["w_packed"].shape[-2]
+    k = 2 * kp
+    if rt.weight_only:
+        # W4A16 baseline (AWQ/OmniQuant style): dequantize-to-bf16 GEMM
+        w = Q.unpack_int4_interleaved(
+            params["w_packed"], axis=-2, block_size=BLOCK_K
+        ).astype(jnp.float32)
+        n = w.shape[-1]
+        scale = jnp.repeat(params["w_scale"], BLOCK_K, axis=-2)
+        w = (w * scale).astype(jnp.bfloat16)
+        out = x.astype(jnp.bfloat16) @ w
+        if "b" in params:
+            out = out + params["b"].astype(jnp.bfloat16)
+        return out
+    nb = k // BLOCK_K
+    nb4 = max(0, min(nb, int(round(rt.int4_fraction * nb))))
+    spec = QLinearSpec(
+        k=k, n=params["w_packed"].shape[-1], k4=nb4 * BLOCK_K,
+        has_perm="perm" in params, schedule=rt.schedule, impl=rt.impl,
+    )
+    return qlinear_apply(spec, params, x)
+
+
+_common.register_quant_linear(_dispatch_qlinear)

@@ -1,0 +1,326 @@
+"""Low-bit quantization primitives for COMET (W4 / A4 / A8 / KV4).
+
+Conventions
+-----------
+* INT4 values live in [-8, 7]. They are stored *biased* by +8 as unsigned
+  nibbles in [0, 15], two per uint8 byte, so that the in-kernel unpack can
+  use the paper's zero-extension trick (COMET §4.3): a mask and a logical
+  shift produce both nibbles; the -8 bias is folded into either a single
+  subtract or, in the optimized GEMM path, into a per-block correction
+  term ``-8 * sum_k(a_k)`` applied once per accumulation block.
+* INT8 values live in [-128, 127] and are stored as plain int8.
+* Scales are float32. Activation/group scales are per-(row, K-block);
+  weight scales are per-(output-channel,) or per-(K-block, output-channel)
+  for group quantization.
+
+All functions are jittable and differentiable-free (PTQ only).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT4_MIN = -8
+INT4_MAX = 7
+INT4_BIAS = 8  # stored nibble = q + 8  in [0, 15]
+INT8_MIN = -128
+INT8_MAX = 127
+
+__all__ = [
+    "INT4_MIN",
+    "INT4_MAX",
+    "INT4_BIAS",
+    "QuantizedTensor",
+    "absmax_scale",
+    "asym_scale_zero",
+    "quantize_int4",
+    "quantize_int8",
+    "dequantize_int4",
+    "dequantize_int8",
+    "pack_int4",
+    "unpack_int4",
+    "pack_int4_interleaved",
+    "unpack_int4_interleaved",
+    "quantize_weight_int4",
+    "quantize_act_groupwise",
+    "quantize_kv_channelwise",
+    "dequantize_kv_channelwise",
+]
+
+
+class QuantizedTensor(NamedTuple):
+    """A quantized tensor with its dequantization metadata.
+
+    ``data``  packed uint8 (int4, two nibbles/byte) or int8 payload.
+    ``scale`` float32 scales, broadcastable against the logical shape.
+    ``zero``  float32 zero-points (asymmetric) or None-like zeros.
+    ``bits``  4 or 8.
+    ``shape`` logical (unpacked) shape.
+    """
+
+    data: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    shape: tuple
+
+
+# ---------------------------------------------------------------------------
+# Scale computation
+# ---------------------------------------------------------------------------
+
+def absmax_scale(x: jax.Array, axis, bits: int, clip_ratio: float = 1.0) -> jax.Array:
+    """Symmetric scale s.t. clip_ratio*absmax maps to the max quant level."""
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    amax = jnp.maximum(amax * clip_ratio, 1e-8)
+    return (amax / qmax).astype(jnp.float32)
+
+
+def asym_scale_zero(x: jax.Array, axis, bits: int):
+    """Asymmetric scale/zero-point: x ≈ (q - zero) * scale, q in [0, 2^b-1]."""
+    qmax = float(2**bits - 1)
+    xmin = jnp.min(x, axis=axis, keepdims=True)
+    xmax = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum((xmax - xmin) / qmax, 1e-8).astype(jnp.float32)
+    zero = jnp.round(-xmin / scale)
+    return scale, zero.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise quant / dequant
+# ---------------------------------------------------------------------------
+
+def quantize_int4(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int4 quantization → int8 array of values in [-8, 7]."""
+    q = jnp.clip(jnp.round(x / scale), INT4_MIN, INT4_MAX)
+    return q.astype(jnp.int8)
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int4(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# INT4 packing — two nibbles per byte, biased storage (zero-extension trick)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack int4 values (int8 storage, [-8,7]) into uint8 bytes along ``axis``.
+
+    Byte ``j`` holds logical elements ``2j`` (low nibble) and ``2j+1``
+    (high nibble), each stored biased by +8 → unsigned [0, 15]. The packed
+    axis length must be even.
+    """
+    axis = axis % q.ndim
+    if q.shape[axis] % 2 != 0:
+        raise ValueError(f"pack axis length {q.shape[axis]} must be even")
+    biased = (q.astype(jnp.int32) + INT4_BIAS).astype(jnp.uint8)
+    lo = jax.lax.slice_in_dim(biased, 0, None, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(biased, 1, None, stride=2, axis=axis)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_int4` → int8 values in [-8, 7].
+
+    The cheap path: ``lo = b & 0xF`` , ``hi = b >> 4`` (logical shift on
+    uint8), then one bias subtract. This is the COMET §4.3 fast conversion
+    adapted to the TPU VPU — 2 vector ops per byte for the nibble
+    extraction; the bias is folded away entirely inside the GEMM kernel.
+    """
+    axis = axis % packed.ndim
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.int8)
+    hi = (packed >> jnp.uint8(4)).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    new_shape = list(packed.shape)
+    new_shape[axis] = packed.shape[axis] * 2
+    out = out.reshape(new_shape)
+    return out - jnp.int8(INT4_BIAS)
+
+
+def unpack_int4_biased(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Unpack to *biased* unsigned nibbles [0,15] as int8 — no bias subtract.
+
+    Used by the optimized GEMM: dot(a, q_biased) - 8*sum(a) == dot(a, q).
+    """
+    axis = axis % packed.ndim
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.int8)
+    hi = (packed >> jnp.uint8(4)).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    new_shape = list(packed.shape)
+    new_shape[axis] = packed.shape[axis] * 2
+    return out.reshape(new_shape)
+
+
+def pack_int4_interleaved(
+    q: jax.Array, axis: int = 0, block_size: int | None = None
+) -> jax.Array:
+    """COMET weight-interleave layout (§4.3 Fig. 6) — the *location switch*.
+
+    Within each contiguous block of ``block_size`` elements along ``axis``
+    (default: the whole axis), byte ``j`` holds elements ``j`` (low nibble)
+    and ``j + block_size/2`` (high nibble) — rather than ``2j``, ``2j+1``.
+    After the cheap nibble split the kernel obtains two contiguous
+    half-block panels that concatenate back in order with **no**
+    element-interleave shuffle — the VPU analogue of the paper's layout
+    that avoids `ldmatrix` bank conflicts. Using ``block_size`` equal to
+    the quantization block (128) keeps every packed tile self-contained
+    so BlockSpec tiling along K never splits a byte's two nibbles across
+    tiles.
+    """
+    axis = axis % q.ndim
+    k = q.shape[axis]
+    bs = k if block_size is None else block_size
+    if bs % 2 != 0 or k % bs != 0:
+        raise ValueError(f"axis length {k} must tile into even blocks of {bs}")
+    biased = (q.astype(jnp.int32) + INT4_BIAS).astype(jnp.uint8)
+    # [pre, k, post] -> [pre, nb, bs, post] -> split halves -> pack
+    moved = jnp.moveaxis(biased, axis, 0)
+    nb = k // bs
+    moved = moved.reshape(nb, bs, *moved.shape[1:])
+    lo = moved[:, : bs // 2]
+    hi = moved[:, bs // 2 :]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    packed = packed.reshape(nb * (bs // 2), *packed.shape[2:])
+    return jnp.moveaxis(packed, 0, axis)
+
+
+def unpack_int4_interleaved(
+    packed: jax.Array, axis: int = 0, block_size: int | None = None
+) -> jax.Array:
+    """Inverse of :func:`pack_int4_interleaved` → int8 [-8,7]."""
+    axis = axis % packed.ndim
+    kp = packed.shape[axis]
+    bsh = kp if block_size is None else block_size // 2
+    if kp % bsh != 0:
+        raise ValueError(f"packed axis {kp} must tile into blocks of {bsh}")
+    moved = jnp.moveaxis(packed, axis, 0)
+    nb = kp // bsh
+    moved = moved.reshape(nb, bsh, *moved.shape[1:])
+    lo = (moved & jnp.uint8(0x0F)).astype(jnp.int8) - jnp.int8(INT4_BIAS)
+    hi = (moved >> jnp.uint8(4)).astype(jnp.int8) - jnp.int8(INT4_BIAS)
+    out = jnp.concatenate([lo, hi], axis=1)
+    out = out.reshape(nb * bsh * 2, *out.shape[2:])
+    return jnp.moveaxis(out, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (W4): per-output-channel or per-(K-group, out-channel)
+# ---------------------------------------------------------------------------
+
+def quantize_weight_int4(
+    w: jax.Array,
+    group_size: int = -1,
+    clip_ratio: float = 1.0,
+) -> QuantizedTensor:
+    """Quantize a [K, N] weight matrix to symmetric int4.
+
+    group_size == -1 → per-output-channel (one scale per column).
+    group_size == g  → one scale per (K-group of g, column) — OmniQuant-
+    style group quantization.
+    Returns packed (interleaved) uint8 data of shape [K/2, N].
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected [K, N] weight, got {w.shape}")
+    k, n = w.shape
+    if group_size == -1:
+        scale = absmax_scale(w, axis=0, bits=4, clip_ratio=clip_ratio)  # [1, N]
+        q = quantize_int4(w, scale)
+    else:
+        if k % group_size != 0:
+            raise ValueError(f"K={k} not divisible by group_size={group_size}")
+        wg = w.reshape(k // group_size, group_size, n)
+        scale = absmax_scale(wg, axis=1, bits=4, clip_ratio=clip_ratio)  # [K/g,1,N]
+        q = quantize_int4(wg, scale).reshape(k, n)
+        scale = scale[:, 0, :]  # [K/g, N]
+    block = None if group_size == -1 else group_size
+    packed = pack_int4_interleaved(q, axis=0, block_size=block)
+    zero = jnp.zeros((), jnp.float32)
+    return QuantizedTensor(packed, scale, zero, 4, (k, n))
+
+
+def dequantize_weight_int4(qt: QuantizedTensor, group_size: int = -1) -> jax.Array:
+    k, n = qt.shape
+    block = None if group_size == -1 else group_size
+    q = unpack_int4_interleaved(qt.data, axis=0, block_size=block).astype(jnp.float32)
+    if group_size == -1:
+        return q * qt.scale
+    return (q.reshape(k // group_size, group_size, n) * qt.scale[:, None, :]).reshape(k, n)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization: per-(token, K-block) group-wise, mixed 4/8-bit
+# ---------------------------------------------------------------------------
+
+def quantize_act_groupwise(
+    x: jax.Array,
+    block_size: int = 128,
+    bits: int = 4,
+    clip_ratio: float = 1.0,
+):
+    """Group-wise symmetric quantization of activations [M, K].
+
+    One scale per (row, K-block). Returns (q int8 [M,K], scale [M, K/b]).
+    The block size matches the GEMM accumulation granularity so dequant
+    happens once per block at the int32→f32 boundary.
+    """
+    m, k = x.shape
+    if k % block_size != 0:
+        raise ValueError(f"K={k} not divisible by block={block_size}")
+    nb = k // block_size
+    xb = x.reshape(m, nb, block_size)
+    scale = absmax_scale(xb, axis=2, bits=bits, clip_ratio=clip_ratio)  # [M,nb,1]
+    if bits == 4:
+        q = quantize_int4(xb, scale)
+    elif bits == 8:
+        q = quantize_int8(xb, scale)
+    else:
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    return q.reshape(m, k), scale[:, :, 0]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization: channel-wise asymmetric int4 (COMET §3.2)
+# ---------------------------------------------------------------------------
+
+def quantize_kv_channelwise(kv: jax.Array, axis: int = -1):
+    """Asymmetric int4 over the head-dim channel axis.
+
+    kv: [..., T, D] — scales/zeros are per-channel (over all leading axes
+    except the channel axis itself, computed along the token axis).
+    Returns (packed uint8 [..., T, D/2], scale [..., 1, D], zero [..., 1, D]).
+    """
+    if axis != -1:
+        raise NotImplementedError("channel axis must be last")
+    # reduce over the token axis (-2): per-channel statistics
+    scale, zero = asym_scale_zero(kv, axis=-2, bits=4)
+    q = jnp.clip(jnp.round(kv / scale + zero), 0, 15).astype(jnp.uint8)
+    # Location-switch packing along channels: byte j = (ch j, ch j + D/2),
+    # so the kernel unpack is mask/shift + in-order concat (no shuffle).
+    half = q.shape[-1] // 2
+    lo = q[..., :half]
+    hi = q[..., half:]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale, zero
+
+
+def dequantize_kv_channelwise(packed: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.float32)
+    hi = (packed >> jnp.uint8(4)).astype(jnp.float32)
+    q = jnp.concatenate([lo, hi], axis=-1)
+    return (q - zero) * scale

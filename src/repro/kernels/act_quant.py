@@ -1,0 +1,107 @@
+"""On-the-fly activation quantization kernel (the FMPQ runtime step).
+
+Quantizes a float activation tile to packed int4 (biased nibbles, blocked
+interleave) or int8, emitting per-(row, 128-block) scales. Fused into a
+single pass over the data so the serving path pays one HBM read of the
+fp activation and one write of the (4×/2× smaller) quantized payload.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_K = 128
+HALF = BLOCK_K // 2
+
+__all__ = ["act_quant_int4", "act_quant_int8"]
+
+
+def _act_quant4_kernel(x_ref, p_ref, s_ref, *, nblk):
+    x = x_ref[...]                                     # [bm, nblk*128] f32
+    bm = x.shape[0]
+    xb = x.reshape(bm, nblk, BLOCK_K)
+    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(xb / scale), -8, 7).astype(jnp.int32) + 8
+    qu = q.astype(jnp.uint8)
+    lo = qu[:, :, :HALF]
+    hi = qu[:, :, HALF:]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)        # [bm, nblk, 64]
+    p_ref[...] = packed.reshape(bm, nblk * HALF)
+    s_ref[...] = scale[:, :, 0].astype(jnp.float32)
+
+
+def _act_quant8_kernel(x_ref, q_ref, s_ref, *, nblk):
+    x = x_ref[...]
+    bm = x.shape[0]
+    xb = x.reshape(bm, nblk, BLOCK_K)
+    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -128, 127).astype(jnp.int8)
+    q_ref[...] = q.reshape(bm, nblk * BLOCK_K)
+    s_ref[...] = scale[:, :, 0].astype(jnp.float32)
+
+
+def act_quant_int4(
+    x: jax.Array, *, bm: int = 256, bk: int = 512, interpret: bool = False
+):
+    """x: [M, K] float → (packed uint8 [M, K/2], scale f32 [M, K/128])."""
+    m, k = x.shape
+    if k % BLOCK_K:
+        raise ValueError(f"K={k} must be a multiple of {BLOCK_K}")
+    bk = min(bk, k)
+    nblk = bk // BLOCK_K
+    grid = (pl.cdiv(m, bm), k // bk)
+    kernel = functools.partial(_act_quant4_kernel, nblk=nblk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, nblk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((m, k // BLOCK_K), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x)
+
+
+def act_quant_int8(
+    x: jax.Array, *, bm: int = 256, bk: int = 512, interpret: bool = False
+):
+    """x: [M, K] float → (int8 [M, K], scale f32 [M, K/128])."""
+    m, k = x.shape
+    if k % BLOCK_K:
+        raise ValueError(f"K={k} must be a multiple of {BLOCK_K}")
+    bk = min(bk, k)
+    nblk = bk // BLOCK_K
+    grid = (pl.cdiv(m, bm), k // bk)
+    kernel = functools.partial(_act_quant8_kernel, nblk=nblk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, nblk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, k // BLOCK_K), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x)

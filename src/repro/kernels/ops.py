@@ -1,0 +1,181 @@
+"""jit'd public wrappers around the COMET kernels.
+
+Every op takes ``impl`` ∈ {"auto", "pallas", "ref"}:
+
+* ``auto``   — Pallas on TPU backends, pure-jnp reference elsewhere
+               (CPU dry-run lowering, tests of the ref path). The ref
+               consumes identical packed buffers, so XLA cost/memory
+               analysis of the serving graph reflects true packed bytes.
+* ``pallas`` — force the Pallas kernel (``interpret=True`` off-TPU).
+* ``ref``    — force the jnp oracle.
+
+Shape policy: wrappers accept [..., K] activations, flatten leading dims
+to M, pad M up to the tile multiple, and strip padding on return.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels import w4ax_matmul as WK
+from repro.kernels import kv4_attention as AK
+from repro.kernels import act_quant as QK
+
+BLOCK_K = WK.BLOCK_K
+
+__all__ = [
+    "w4ax_matmul",
+    "kv4_decode_attention",
+    "act_quant",
+    "default_impl",
+]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str):
+    """→ (use_pallas: bool, interpret: bool)."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "pallas":
+        return True, jax.default_backend() != "tpu"
+    if impl == "ref":
+        return False, False
+    raise ValueError(f"impl must be auto|pallas|ref, got {impl}")
+
+
+def _pad_rows(x: jax.Array, multiple: int):
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, m
+
+
+# ---------------------------------------------------------------------------
+# W4Ax GEMM
+# ---------------------------------------------------------------------------
+
+def w4ax_matmul(
+    a4_packed: jax.Array,   # [..., K4/2] uint8
+    a4_scale: jax.Array,    # [..., K4/128] f32
+    a8_q: jax.Array,        # [..., K8] int8
+    a8_scale: jax.Array,    # [..., K8/128] f32
+    w_packed: jax.Array,    # [K/2, N] uint8
+    w_scale: jax.Array,     # [K/128, N] f32
+    *,
+    schedule: str = "split",     # "split" (optimized) | "mixed" (paper baseline)
+    impl: str = "auto",
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """Mixed-precision W4Ax GEMM: out = dequant(a) @ dequant(w). → [..., N] f32."""
+    lead = a4_packed.shape[:-1]
+    n = w_packed.shape[1]
+    m_lead = math.prod(lead) if lead else 1
+
+    a4p = a4_packed.reshape(m_lead, a4_packed.shape[-1])
+    a4s = a4_scale.reshape(m_lead, a4_scale.shape[-1])
+    a8q = a8_q.reshape(m_lead, a8_q.shape[-1])
+    a8s = a8_scale.reshape(m_lead, a8_scale.shape[-1])
+
+    use_pallas, interp = _resolve(impl)
+    nb4 = a4s.shape[1] if a4p.shape[1] else 0
+    k4p = nb4 * WK.PACKED_BLOCK
+
+    if not use_pallas:
+        out = R.w4ax_matmul_ref(
+            a4p, a4s, a8q, a8s,
+            w_packed[:k4p], w_scale[:nb4],
+            w_packed[k4p:], w_scale[nb4:],
+        )
+        return out.reshape(*lead, n)
+
+    m0 = a4p.shape[0] if a4p.shape[1] else a8q.shape[0]
+    eff_bm = min(bm, max(8, 1 << (m0 - 1).bit_length())) if m0 else bm
+    a4p, m = _pad_rows(a4p, eff_bm)
+    a4s, _ = _pad_rows(a4s, eff_bm)
+    a8q, _ = _pad_rows(a8q, eff_bm)
+    a8s, _ = _pad_rows(a8s, eff_bm)
+    if schedule == "split":
+        out = WK.w4ax_matmul_split(
+            a4p, a4s, a8q, a8s, w_packed, w_scale,
+            bm=eff_bm, bn=bn, interpret=interp,
+        )
+    elif schedule == "mixed":
+        out = WK.w4ax_matmul_mixed(
+            a4p, a4s, a8q, a8s, w_packed, w_scale,
+            bm=eff_bm, bn=bn, interpret=interp,
+        )
+    else:
+        raise ValueError(f"schedule must be split|mixed, got {schedule}")
+    return out[:m].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# KV4 decode attention
+# ---------------------------------------------------------------------------
+
+def kv4_decode_attention(
+    q: jax.Array,
+    k_packed: jax.Array,
+    k_scale: jax.Array,
+    k_zero: jax.Array,
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    length: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+    bt: int = 256,
+) -> jax.Array:
+    use_pallas, interp = _resolve(impl)
+    t = k_packed.shape[2]
+    if length is None:
+        length = jnp.full((q.shape[0],), t, jnp.int32)
+    if not use_pallas:
+        return R.kv4_decode_attention_ref(
+            q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, length,
+            compute_dtype=jnp.bfloat16,
+        )
+    bt = min(bt, t)
+    return AK.kv4_decode_attention(
+        q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, length,
+        bt=bt, interpret=interp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization
+# ---------------------------------------------------------------------------
+
+def act_quant(
+    x: jax.Array, *, bits: int = 4, impl: str = "auto", bm: int = 256
+):
+    """[..., K] float → (payload, scales [..., K/128]).
+
+    bits=4 → packed uint8 [..., K/2]; bits=8 → int8 [..., K].
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        payload, scale = R.act_quant_ref(x2, block_size=BLOCK_K, bits=bits)
+    else:
+        x2p, m = _pad_rows(x2, min(bm, max(8, x2.shape[0])))
+        eff_bm = min(bm, x2p.shape[0])
+        if bits == 4:
+            payload, scale = QK.act_quant_int4(x2p, bm=eff_bm, interpret=interp)
+        else:
+            payload, scale = QK.act_quant_int8(x2p, bm=eff_bm, interpret=interp)
+        payload, scale = payload[:m], scale[:m]
+    pk = payload.shape[-1]
+    return payload.reshape(*lead, pk), scale.reshape(*lead, k // BLOCK_K)

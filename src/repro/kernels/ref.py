@@ -1,0 +1,168 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for tests (``assert_allclose`` sweeps) and the
+portable fallback used on CPU (dry-run lowering) where a TPU Pallas body
+would otherwise run through the slow interpreter.
+
+Each oracle consumes the *same packed data structures* as its kernel so
+that XLA's cost/memory analysis of the ref path reflects the true packed
+byte traffic (this is what the roofline reads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as Q
+
+__all__ = [
+    "w4a4_matmul_ref",
+    "w4a8_matmul_ref",
+    "w4ax_matmul_ref",
+    "kv4_decode_attention_ref",
+    "act_quant_ref",
+]
+
+
+def _unpack_w(w_packed: jax.Array, block_size: int) -> jax.Array:
+    """Interleaved packed [K/2, N] uint8 → int8 [K, N] (sign-corrected)."""
+    return Q.unpack_int4_interleaved(w_packed, axis=0, block_size=block_size)
+
+
+def w4a4_matmul_ref(
+    a_packed: jax.Array,   # [M, K/2] uint8 — blocked-interleave packed int4 acts
+    a_scale: jax.Array,    # [M, K/B] f32 per-(row, block) scales
+    w_packed: jax.Array,   # [K/2, N] uint8 — interleaved packed int4 weights
+    w_scale: jax.Array,    # [K/B, N] f32 per-(block, col) scales
+    block_size: int = 128,
+) -> jax.Array:
+    """Uniform W4A4 GEMM with per-block dequant at the int32 boundary."""
+    a = Q.unpack_int4_interleaved(a_packed, axis=1, block_size=block_size)
+    w = _unpack_w(w_packed, block_size)           # [K, N] int8 in [-8, 7]
+    m, k = a.shape
+    n = w.shape[1]
+    nb = k // block_size
+    ab = a.reshape(m, nb, block_size).astype(jnp.int32)
+    wb = w.reshape(nb, block_size, n).astype(jnp.int32)
+    # int32 per-block partial dot: [M, nb, N]
+    part = jnp.einsum("mbk,bkn->mbn", ab, wb)
+    out = jnp.einsum(
+        "mbn,mb,bn->mn",
+        part.astype(jnp.float32),
+        a_scale.astype(jnp.float32),
+        w_scale.astype(jnp.float32),
+    )
+    return out
+
+
+def w4a8_matmul_ref(
+    a_q: jax.Array,        # [M, K] int8 activations
+    a_scale: jax.Array,    # [M, K/B] f32
+    w_packed: jax.Array,   # [K/2, N] uint8 packed int4 weights
+    w_scale: jax.Array,    # [K/B, N] f32
+    block_size: int = 128,
+) -> jax.Array:
+    """Uniform W4A8 GEMM: int4 weights are converted up to int8 (§4.3)."""
+    w = _unpack_w(w_packed, block_size)
+    m, k = a_q.shape
+    n = w.shape[1]
+    nb = k // block_size
+    ab = a_q.reshape(m, nb, block_size).astype(jnp.int32)
+    wb = w.reshape(nb, block_size, n).astype(jnp.int32)
+    part = jnp.einsum("mbk,bkn->mbn", ab, wb)
+    return jnp.einsum(
+        "mbn,mb,bn->mn",
+        part.astype(jnp.float32),
+        a_scale.astype(jnp.float32),
+        w_scale.astype(jnp.float32),
+    )
+
+
+def w4ax_matmul_ref(
+    a4_packed: jax.Array,  # [M, K4/2] uint8 — INT4 blocks (leading K4 channels)
+    a4_scale: jax.Array,   # [M, K4/B]
+    a8_q: jax.Array,       # [M, K8] int8 — INT8 blocks (trailing channels)
+    a8_scale: jax.Array,   # [M, K8/B]
+    w4_packed: jax.Array,  # [K4/2, N]
+    w4_scale: jax.Array,   # [K4/B, N]
+    w8_packed: jax.Array,  # [K8/2, N]  (weights stay int4 in both halves)
+    w8_scale: jax.Array,   # [K8/B, N]
+    block_size: int = 128,
+) -> jax.Array:
+    """Mixed-precision W4Ax GEMM (paper's kernel): K4 channels in W4A4,
+    the remaining K8 in W4A8, accumulated into one output.
+
+    Channel permutation (FMPQ) guarantees the INT8 blocks are the trailing
+    channels, so the mixed GEMM is exactly the sum of two uniform GEMMs.
+    """
+    parts = []
+    if a4_packed.shape[1] > 0:
+        parts.append(
+            w4a4_matmul_ref(a4_packed, a4_scale, w4_packed, w4_scale, block_size)
+        )
+    if a8_q.shape[1] > 0:
+        parts.append(w4a8_matmul_ref(a8_q, a8_scale, w8_packed, w8_scale, block_size))
+    if not parts:
+        raise ValueError("empty GEMM")
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+def kv4_decode_attention_ref(
+    q: jax.Array,          # [B, Hq, D] f32/bf16 — one decode step's queries
+    k_packed: jax.Array,   # [B, Hkv, T, D/2] uint8 — int4 KV cache (asym)
+    k_scale: jax.Array,    # [B, Hkv, 1, D]
+    k_zero: jax.Array,     # [B, Hkv, 1, D]
+    v_packed: jax.Array,   # [B, Hkv, T, D/2]
+    v_scale: jax.Array,    # [B, Hkv, 1, D]
+    v_zero: jax.Array,     # [B, Hkv, 1, D]
+    length: jax.Array | None = None,  # [B] valid KV lengths (<= T)
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Decode attention over a channel-wise-asymmetric int4 KV cache.
+
+    GQA: Hq = G * Hkv; query head h attends with KV head h // G.
+    Returns [B, Hq, D] in float32.
+
+    ``compute_dtype=bf16`` (serving path, §Perf cell A iteration 3):
+    the Pallas kernel keeps the nibble expansion in VMEM; the portable
+    path at least halves the materialized convert traffic by keeping the
+    dequantized operands bf16 with f32 MXU accumulation. Tests use the
+    f32 default as the exact oracle.
+    """
+    b, hq, d = q.shape
+    hkv = k_packed.shape[1]
+    g = hq // hkv
+    t = k_packed.shape[2]
+
+    k_deq = Q.dequantize_kv_channelwise(
+        k_packed, k_scale, k_zero).astype(compute_dtype)
+    v_deq = Q.dequantize_kv_channelwise(
+        v_packed, v_scale, v_zero).astype(compute_dtype)
+
+    qg = q.reshape(b, hkv, g, d).astype(compute_dtype)
+    scores = jnp.einsum("bhgd,bhtd->bhgt", qg, k_deq,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(
+        float(d))
+    if length is not None:
+        mask = jnp.arange(t)[None, None, None, :] < length[:, None, None, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p.astype(compute_dtype), v_deq,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d)
+
+
+def act_quant_ref(x: jax.Array, block_size: int = 128, bits: int = 4):
+    """Oracle for the on-the-fly activation quantization kernel.
+
+    x: [M, K] → (packed-or-int8 payload, scale [M, K/B]).
+    bits=4 returns packed uint8 [M, K/2]; bits=8 returns int8 [M, K].
+    """
+    q, s = Q.quantize_act_groupwise(x, block_size=block_size, bits=bits)
+    if bits == 4:
+        return Q.pack_int4_interleaved(q, axis=1, block_size=block_size), s
+    return q, s

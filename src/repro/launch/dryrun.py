@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 host placeholder
+devices (16×16 single-pod, 2×16×16 multi-pod).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_72b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, all_cells, applicable_shapes, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # "%x = f32[...] all-reduce(...)" or tuple-shaped results
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        shape_part, opname = m.groups()
+        matched = None
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname.startswith(op + "-"):
+                matched = op
+                break
+        if matched is None:
+            continue
+        # shape_part may be a tuple "(f32[...], u8[...])"
+        total = 0
+        for sm in _SHAPE_RE.finditer(shape_part):
+            total += _shape_bytes(sm.group(0))
+        out[matched] += total
+        counts[matched] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, schedule: str = "split",
+             fsdp: bool = True, save_hlo: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models.lm import QuantConfig
+    quant = QuantConfig(impl="ref", schedule=schedule)
+    cell = build_cell(arch, shape_name, mesh, quant=quant, fsdp=fsdp)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": cell.kind, "schedule": schedule, "status": "fail",
+    }
+    try:
+        with mesh:
+            jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower - t0, 1),
+            "compile_s": round(t_compile - t_lower, 1),
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(
+                    getattr(mem, "generated_code_size_in_bytes", 0)),
+            },
+            "collectives": coll,
+        })
+        if save_hlo:
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_{mesh_name}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    fname = f"{arch}_{shape_name}_{mesh_name}_{schedule}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--schedule", type=str, default="split",
+                    choices=["split", "mixed"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s)
+                 for s in applicable_shapes(get_config(args.arch))]
+    else:
+        ap.error("need --all or --arch [--shape]")
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out,
+                           schedule=args.schedule, fsdp=not args.no_fsdp,
+                           save_hlo=args.save_hlo)
+            status = rec["status"]
+            extra = ("" if status == "ok" else
+                     " :: " + rec.get("error", "")[:200])
+            print(f"[{status}] {arch} {shape} "
+                  f"{'2x16x16' if mp else '16x16'} "
+                  f"lower={rec.get('lower_s', '-')}s "
+                  f"compile={rec.get('compile_s', '-')}s"
+                  f"{extra}", flush=True)
+            if status != "ok":
+                failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

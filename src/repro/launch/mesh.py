@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never module-level state) so that
+importing this module never touches JAX device initialization — the
+dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import and then calls this.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)} "
+            "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax)")
+    return jax.sharding.Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    devices = jax.devices()
+    n = len(devices)
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.sharding.Mesh(
+        np.array(devices[: data * model]).reshape(data, model),
+        ("data", "model"))

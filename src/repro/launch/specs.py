@@ -1,0 +1,179 @@
+"""ShapeDtypeStruct stand-ins and sharding assembly for every dry-run cell.
+
+``build_cell(arch, shape_name, mesh)`` returns everything dryrun.py needs:
+the step function, argument ShapeDtypeStructs, and matching in_shardings —
+with **zero** device allocation (params/caches come from jax.eval_shape;
+the logical-axes metadata is captured through a trace-time side channel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, get_config
+from repro.models.lm import LM, QuantConfig
+from repro.parallel import sharding as SH
+from repro.training import optimizer as OPT
+from repro.training.train_loop import make_train_step
+
+__all__ = ["build_cell", "input_specs", "shapes_of_init"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def shapes_of_init(lm: LM, quantized: bool = False):
+    """(param ShapeDtypeStructs, axes tree) without materializing params."""
+    side = {}
+
+    def init_only(key):
+        params, axes = lm.init(key)
+        if quantized:
+            params, axes = lm.quantize(params, axes)
+        side["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return shapes, side["axes"]
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the model *inputs* of one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+            "mask": SDS((b, s), jnp.float32),
+        }
+        if cfg.family == "audio":
+            out["frames"] = SDS((b, s, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            out["image_embeds"] = SDS(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((b, s), jnp.int32)}
+        if cfg.family == "audio":
+            out["frames"] = SDS((b, s, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            out["image_embeds"] = SDS(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": SDS((b, 1), jnp.int32)}
+
+
+def _batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    bspec = SH.batch_spec(mesh)
+    baxes = bspec[0]
+    bsize = SH._axes_size(mesh, baxes)
+
+    def one(sds):
+        dims = [None] * sds.ndim
+        if sds.shape[0] % bsize == 0 and sds.shape[0] > 0:
+            dims[0] = baxes
+        return NamedSharding(mesh, P(*dims))
+
+    return {k: one(v) for k, v in specs.items()}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str
+    step_fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    cfg: ModelConfig
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               *, quant: Optional[QuantConfig] = None,
+               fsdp: bool = True) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    ins = input_specs(arch, shape_name)
+
+    if shape.kind == "train":
+        lm = LM(cfg)
+        params, axes = shapes_of_init(lm)
+        opt_state = jax.eval_shape(OPT.adamw_init, params)
+        step = make_train_step(lm, OPT.AdamWConfig())
+        rules = dict(SH.TRAIN_RULES)
+        if not fsdp:
+            rules["embed"] = None
+        psh = SH.tree_shardings(axes, params, mesh, rules)
+        osh = {
+            "m": psh, "v": psh,
+            "step": NamedSharding(mesh, P()),
+        }
+        bsh = _batch_shardings(ins, mesh)
+        batch = ins
+
+        def train_step(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        return Cell(arch, shape_name, "train", train_step,
+                    (params, opt_state, batch), (psh, osh, bsh), cfg)
+
+    # serving cells run the quantized W4AxKV4 model (the paper's system).
+    q = quant or QuantConfig(impl="ref")
+    lmq = LM(cfg, quant=q)
+    qparams, qaxes = shapes_of_init(lmq, quantized=True)
+    psh = SH.tree_shardings(qaxes, qparams, mesh, SH.SERVE_RULES)
+
+    if shape.kind == "prefill":
+        if cfg.encoder_only:
+            # encoder "prefill" = one quantized forward over the sequence
+            def encode_step(params, tokens, frames):
+                logits, _ = lmq.train_logits(params, tokens,
+                                             {"frames": frames})
+                return logits
+
+            bsh = _batch_shardings(ins, mesh)
+            return Cell(arch, shape_name, "prefill", encode_step,
+                        (qparams, ins["tokens"], ins["frames"]),
+                        (psh, bsh["tokens"], bsh["frames"]), cfg)
+
+        cache = jax.eval_shape(lambda: lmq.init_cache(b, s))
+        csh = jax.tree.map(
+            lambda p: NamedSharding(mesh, p),
+            SH.cache_pspecs(cache, mesh, seq_parallel=(b == 1)))
+        bsh = _batch_shardings(ins, mesh)
+        if cfg.family == "vlm":
+            def prefill_step(params, tokens, cache, image_embeds):
+                return lmq.prefill(params, tokens, cache,
+                                   {"image_embeds": image_embeds})
+            return Cell(arch, shape_name, "prefill", prefill_step,
+                        (qparams, ins["tokens"], cache, ins["image_embeds"]),
+                        (psh, bsh["tokens"], csh, bsh["image_embeds"]), cfg)
+
+        def prefill_step(params, tokens, cache):
+            return lmq.prefill(params, tokens, cache)
+
+        return Cell(arch, shape_name, "prefill", prefill_step,
+                    (qparams, ins["tokens"], cache),
+                    (psh, bsh["tokens"], csh), cfg)
+
+    # decode
+    cache = jax.eval_shape(lambda: lmq.init_cache(b, s))
+    csh = jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        SH.cache_pspecs(cache, mesh, seq_parallel=(b == 1)))
+    bsh = _batch_shardings(ins, mesh)
+
+    def serve_step(params, tokens, cache):
+        return lmq.decode(params, tokens, cache)
+
+    return Cell(arch, shape_name, "decode", serve_step,
+                (qparams, ins["tokens"], cache),
+                (psh, bsh["tokens"], csh), cfg)

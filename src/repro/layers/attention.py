@@ -1,0 +1,313 @@
+"""Attention: chunked-flash self-attention (train/prefill), cached decode
+(fp16 and quantized-KV4 paths), GQA, RoPE, optional QK-norm, cross-attn.
+
+The train/prefill path is a pure-jnp online-softmax flash attention
+(lax.scan over KV chunks) so compiled intermediates stay O(S·chunk)
+instead of O(S²) — mandatory for the 32k prefill dry-run cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quantizer as Q
+from repro.kernels import ops
+from repro.layers import common as C
+
+NEG_INF = -1e30
+
+__all__ = [
+    "init_attention",
+    "flash_attention",
+    "attention_train",
+    "attention_prefill",
+    "attention_decode_fp",
+    "attention_decode_q4",
+    "init_fp_cache",
+    "init_q4_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": C.init_linear(ks[0], d, qd, ("embed", "qdim"), bias=cfg.qkv_bias),
+        "wk": C.init_linear(ks[1], d, kvd, ("embed", "kvdim"), bias=cfg.qkv_bias),
+        "wv": C.init_linear(ks[2], d, kvd, ("embed", "kvdim"), bias=cfg.qkv_bias),
+        "wo": C.init_linear(ks[3], qd, d, ("qdim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = C.init_norm("rmsnorm", cfg.head_dim, (None,))
+        p["k_norm"] = C.init_norm("rmsnorm", cfg.head_dim, (None,))
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, xq, xkv, positions_q, positions_kv,
+                 use_rope: bool = True):
+    b = xq.shape[0]
+    q = C.linear(params["wq"], xq).reshape(b, -1, cfg.num_heads, cfg.head_dim)
+    k = C.linear(params["wk"], xkv).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+    v = C.linear(params["wv"], xkv).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = C.rmsnorm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = C.rmsnorm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    if use_rope:
+        q = C.apply_rope(q, positions_q, cfg.rope_theta)
+        k = C.apply_rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure jnp, O(S·chunk) memory)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,          # [B, S, H, D]
+    k: jax.Array,          # [B, T, Hkv, D]
+    v: jax.Array,          # [B, T, Hkv, D]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,     # absolute position of q[0] (for causal masking)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t_orig, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t_orig)
+    s_pad = (-s) % q_chunk
+    t_pad = (-t_orig) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    s_full, t = s + s_pad, t_orig + t_pad
+    nq, nk = s_full // q_chunk, t // kv_chunk
+
+    sm = 1.0 / jnp.sqrt(jnp.float32(d))
+    qs = (q.astype(jnp.float32) * sm).reshape(b, nq, q_chunk, hkv, g, d)
+    qs = jnp.moveaxis(qs, 1, 0)                       # [nq, B, qc, Hkv, G, D]
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc                                # qc: [B, qcnk, Hkv, G, D]
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kc, vc = ki_kv
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qc, kc.astype(jnp.float32)
+            )                                          # [B,Hkv,G,qc,kc]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            if causal:
+                qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & (
+                    kpos[None, :] < t_orig)
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            elif t_pad:
+                sc = jnp.where((kpos < t_orig)[None, None, None, None],
+                               sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            l = l * alpha + jnp.sum(p, axis=-1)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-20)[..., None]   # [B,Hkv,G,qc,D]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: [nq, B, Hkv, G, qc, D] → [B, S, H, D]
+    out = jnp.moveaxis(outs, 0, 3)                     # [B,Hkv,G,nq,qc,D]
+    out = out.reshape(b, hkv, g, s_full, d)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s_full, h, d)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# Modes
+# ---------------------------------------------------------------------------
+
+def attention_train(params, cfg: ModelConfig, x, positions=None,
+                    kv_override=None):
+    """Full self-attention (or cross-attention when kv_override given)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    xkv = x if kv_override is None else kv_override
+    use_rope = kv_override is None
+    pk = positions if kv_override is None else jnp.zeros(
+        (b, xkv.shape[1]), jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, xkv, positions, pk, use_rope)
+    out = flash_attention(q, k, v, causal=cfg.causal and kv_override is None)
+    out = out.astype(x.dtype).reshape(b, s, cfg.q_dim)
+    return C.linear(params["wo"], out)
+
+
+def attention_prefill(params, cfg: ModelConfig, x, cache, positions=None):
+    """Causal self-attention + write the fp KV cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+    out = flash_attention(q, k, v, causal=cfg.causal)
+    out = out.astype(x.dtype).reshape(b, s, cfg.q_dim)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return C.linear(params["wo"], out), cache
+
+
+def init_fp_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def attention_decode_fp(params, cfg: ModelConfig, x, cache):
+    """One-token decode against the fp cache. x: [B, 1, D]."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    pos = cache["length"][:, None]                     # [B, 1]
+    q, k, v = _project_qkv(params, cfg, x, x, pos, pos)
+
+    def upd(c, new):
+        return jax.vmap(
+            lambda cb, nb, i: jax.lax.dynamic_update_slice(cb, nb, (i, 0, 0))
+        )(c, new.astype(c.dtype), cache["length"])
+
+    k_cache = upd(cache["k"], k)
+    v_cache = upd(cache["v"], v)
+    length = cache["length"] + 1
+
+    qf = q[:, 0].astype(jnp.float32)                   # [B, H, D]
+    g = cfg.num_heads // cfg.num_kv_heads
+    qg = qf.reshape(b, cfg.num_kv_heads, g, cfg.head_dim)
+    # k_cache layout is [B, T, Hkv, D]
+    sc = jnp.einsum("bhgd,bThd->bhgT", qg, k_cache.astype(jnp.float32))
+    sc = sc / jnp.sqrt(jnp.float32(cfg.head_dim))
+    mask = jnp.arange(t)[None, None, None] < length[:, None, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgT,bThd->bhgd", p, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "length": length}
+    return C.linear(params["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV4 cache (COMET serving path)
+# ---------------------------------------------------------------------------
+
+def init_q4_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  k_stats=None, v_stats=None):
+    """Packed int4 cache with *static* per-channel scales/zeros.
+
+    k_stats/v_stats: optional calibrated (scale, zero) [Hkv, 1, D]; defaults
+    are generic ranges (|k| ≤ 8 post-norm works for RoPE'd keys).
+    """
+    hkv, d = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, hkv, max_len, d // 2)
+
+    def default_stats(rng_range):
+        scale = jnp.full((hkv, 1, d), rng_range / 15.0, jnp.float32)
+        zero = jnp.full((hkv, 1, d), 7.5, jnp.float32)
+        return scale, zero
+
+    ks, kz = k_stats if k_stats is not None else default_stats(16.0)
+    vs, vz = v_stats if v_stats is not None else default_stats(16.0)
+    bcast = lambda a: jnp.broadcast_to(a[None], (batch, hkv, 1, d))
+    return {
+        "k_packed": jnp.zeros(shape, jnp.uint8),
+        "v_packed": jnp.zeros(shape, jnp.uint8),
+        "k_scale": bcast(ks), "k_zero": bcast(kz),
+        "v_scale": bcast(vs), "v_zero": bcast(vz),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _quant_kv_static(kv, scale, zero):
+    """kv: [B, Hkv, S, D]; static per-channel affine → packed [B,Hkv,S,D/2]."""
+    n = jnp.clip(jnp.round(kv / scale + zero), 0, 15).astype(jnp.uint8)
+    half = n.shape[-1] // 2
+    return (n[..., :half] | (n[..., half:] << 4)).astype(jnp.uint8)
+
+
+def attention_prefill_q4(params, cfg: ModelConfig, x, cache, positions=None):
+    """Prefill that writes the packed int4 cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+    out = flash_attention(q, k, v, causal=cfg.causal)
+    out = out.astype(x.dtype).reshape(b, s, cfg.q_dim)
+
+    kt = k.swapaxes(1, 2).astype(jnp.float32)          # [B, Hkv, S, D]
+    vt = v.swapaxes(1, 2).astype(jnp.float32)
+    kp = _quant_kv_static(kt, cache["k_scale"], cache["k_zero"])
+    vp = _quant_kv_static(vt, cache["v_scale"], cache["v_zero"])
+    cache = dict(cache)
+    cache["k_packed"] = jax.lax.dynamic_update_slice(
+        cache["k_packed"], kp, (0, 0, 0, 0))
+    cache["v_packed"] = jax.lax.dynamic_update_slice(
+        cache["v_packed"], vp, (0, 0, 0, 0))
+    cache["length"] = jnp.full((b,), s, jnp.int32)
+    return C.linear(params["wo"], out), cache
+
+
+def attention_decode_q4(params, cfg: ModelConfig, x, cache, *, impl="auto"):
+    """One-token decode over the packed int4 KV cache (the COMET path)."""
+    b = x.shape[0]
+    pos = cache["length"][:, None]
+    q, k, v = _project_qkv(params, cfg, x, x, pos, pos)
+
+    kt = k.swapaxes(1, 2).astype(jnp.float32)          # [B, Hkv, 1, D]
+    vt = v.swapaxes(1, 2).astype(jnp.float32)
+    kp_new = _quant_kv_static(kt, cache["k_scale"], cache["k_zero"])
+    vp_new = _quant_kv_static(vt, cache["v_scale"], cache["v_zero"])
+
+    def upd(c, new):
+        return jax.vmap(
+            lambda cb, nb, i: jax.lax.dynamic_update_slice(cb, nb, (0, i, 0))
+        )(c, new, cache["length"])
+
+    cache = dict(cache)
+    cache["k_packed"] = upd(cache["k_packed"], kp_new)
+    cache["v_packed"] = upd(cache["v_packed"], vp_new)
+    cache["length"] = cache["length"] + 1
+
+    out = ops.kv4_decode_attention(
+        q[:, 0], cache["k_packed"], cache["k_scale"], cache["k_zero"],
+        cache["v_packed"], cache["v_scale"], cache["v_zero"],
+        cache["length"], impl=impl,
+    )                                                   # [B, H, D] f32
+    out = out.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    return C.linear(params["wo"], out), cache

@@ -1,0 +1,161 @@
+"""Shared layer primitives: annotated params, norms, RoPE, linear layers.
+
+Parameter convention
+--------------------
+``init_*`` functions return pytrees whose leaves are :class:`Annotated`
+(array + logical axis names). :func:`split_annotations` separates the
+tree into (params, axes) — the axes tree feeds ``parallel/sharding.py``
+which maps logical names → mesh ``PartitionSpec``s.
+
+Logical axis vocabulary:
+  "embed"   d_model            "vocab"  vocabulary
+  "heads"   q heads            "kv"     kv heads
+  "qdim"    heads*head_dim     "kvdim"  kv_heads*head_dim
+  "mlp"     FFN inner          "experts" MoE experts
+  "layers"  stacked scan axis  None     replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Annotated",
+    "split_annotations",
+    "dense_init",
+    "rmsnorm",
+    "layernorm",
+    "apply_norm",
+    "init_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "init_linear",
+    "linear",
+    "init_embedding",
+]
+
+
+class Annotated(NamedTuple):
+    value: jax.Array
+    axes: tuple
+
+
+def is_annotated(x) -> bool:
+    return isinstance(x, Annotated)
+
+
+def split_annotations(tree):
+    """Annotated tree → (params tree, logical-axes tree)."""
+    params = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annotated)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annotated)
+    return params, axes
+
+
+def dense_init(key, shape, axes, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init, annotated."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.maximum(1.0, fan_in))
+    w = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Annotated(w.astype(dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, axes=("embed",)):
+    p = {"scale": Annotated(jnp.ones((d,), jnp.float32), axes)}
+    if kind == "layernorm":
+        p["bias"] = Annotated(jnp.zeros((d,), jnp.float32), axes)
+    return p
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-5):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_frequencies(d, theta)                       # [half]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                      # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear (fp path; the quantized path lives in core/qlinear.py)
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in, d_out, axes, bias: bool = False, scale=None):
+    p = {"w": dense_init(key, (d_in, d_out), axes, scale=scale)}
+    if bias:
+        p["b"] = Annotated(jnp.zeros((d_out,), jnp.float32), (axes[1],))
+    return p
+
+
+# Quantized projections register a handler here (core/qlinear.py) so every
+# layer's ``C.linear`` transparently dispatches fp vs W4Ax on the param
+# structure ("w" vs "w_packed").
+_QUANT_LINEAR_HANDLER = None
+
+
+def register_quant_linear(fn):
+    global _QUANT_LINEAR_HANDLER
+    _QUANT_LINEAR_HANDLER = fn
+
+
+def linear(params, x, compute_dtype=jnp.bfloat16):
+    if "w_packed" in params:
+        return _QUANT_LINEAR_HANDLER(params, x).astype(compute_dtype)
+    w = params["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int):
+    return {
+        "table": dense_init(key, (vocab, d), ("vocab", "embed"), scale=1.0)
+    }

@@ -1,0 +1,246 @@
+"""Mamba2 / SSD block (zamba2 backbone) — chunked state-space duality.
+
+Follows the SSD formulation (Mamba-2, arXiv:2405.21060): within chunks of
+length Q the recurrence is materialized as a masked attention-like matrix
+(all MXU-friendly einsums); across chunks a lax.scan carries the
+[B, H, P, N] state. Decode is the O(1) recurrent step.
+
+Layout: d_inner = expand·d_model, H = d_inner / head_dim (P), one B/C
+group (G=1) of state size N = ssm_state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import common as C
+from repro.layers.common import Annotated
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_train",
+    "mamba2_decode",
+    "init_mamba2_state",
+]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # z (gate), x, B, C, dt  fused projection
+        "in_proj": C.init_linear(
+            ks[0], d, 2 * d_in + 2 * n + h, ("embed", "mlp")),
+        "conv_w": Annotated(
+            0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32),
+            (None, "mlp")),
+        "conv_b": Annotated(jnp.zeros((conv_ch,), jnp.float32), ("mlp",)),
+        "dt_bias": Annotated(
+            jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(
+                    ks[2], (h,), minval=jnp.log(0.001), maxval=jnp.log(0.1))))),
+            (None,)),
+        "A_log": Annotated(
+            jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)), (None,)),
+        "D": Annotated(jnp.ones((h,), jnp.float32), (None,)),
+        "norm": C.init_norm("rmsnorm", d_in, ("mlp",)),
+        "out_proj": C.init_linear(ks[3], d_in, d, ("mlp", "embed")),
+    }
+
+
+def _split_proj(params, cfg, u):
+    d_in, h, p, n = _dims(cfg)
+    zxbcdt = C.linear(params["in_proj"], u)            # [B, L, 2di+2n+h]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d. xbc: [B, L, Ch], w: [K, Ch].
+
+    Runs in the input dtype (bf16 on the train path — §Perf cell C,
+    iteration 3: the f32 conv/gating chain dominated HBM traffic)."""
+    k = w.shape[0]
+    dt = xbc.dtype
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :].astype(dt)
+        for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :].astype(dt))
+
+
+def _ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
+    """Chunked SSD scan.
+
+    x:   [B, L, H, P]   inputs (already dt-weighted NOT applied; we apply)
+    dt:  [B, L, H]      softplus'd step sizes
+    b_mat/c_mat: [B, L, N]
+    Returns y [B, L, H, P].
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    l_orig = l
+    pad = (-l) % q
+    if pad:
+        # dt=0 padding is exact: decay=1 and zero state/output contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // q
+
+    a = -jnp.exp(a_log)                                 # [H] (negative)
+    la = dt * a[None, None, :]                          # [B, L, H] log-decay
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    lar = la.reshape(bsz, nc, q, h)
+    br = b_mat.reshape(bsz, nc, q, n)
+    cr = c_mat.reshape(bsz, nc, q, n)
+
+    cums = jnp.cumsum(lar, axis=2)                      # [B,NC,Q,H]
+    # intra-chunk: M[i,j] = exp(cums_i − cums_j)·dt_j · (C_i·B_j), j ≤ i
+    # The O(B·NC·Q²·H) decay/score tensors are the memory-dominant
+    # intermediates of the whole train step; they are bounded (≤1 decay,
+    # O(1) scores) so bf16 storage with f32 MXU accumulation halves the
+    # dominant HBM term (§Perf cell C, iteration 2).
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # [B,NC,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(
+        tri[None, None, :, :, None], jnp.exp(seg), 0.0).astype(jnp.bfloat16)
+    g = jnp.einsum("bcin,bcjn->bcij", cr.astype(jnp.bfloat16),
+                   br.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    m = g[..., None] * decay * dtr[:, :, None, :, :].astype(jnp.bfloat16)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m,
+                         xr.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+
+    # chunk-final states: S_c = Σ_j exp(cums_Q − cums_j)·dt_j · B_j ⊗ x_j
+    dec_end = jnp.exp(cums[:, :, -1:, :] - cums)        # [B,NC,Q,H]
+    sc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    (dec_end * dtr).astype(jnp.bfloat16),
+                    br.astype(jnp.bfloat16), xr.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)  # [B,NC,H,N,P] f32
+    chunk_decay = jnp.exp(cums[:, :, -1, :])            # [B,NC,H] total decay
+
+    def scan_fn(s_prev, inp):
+        s_c, dec = inp                                  # [B,H,N,P], [B,H]
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_before = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )                                                   # [NC,B,H,N,P]
+    s_before = jnp.moveaxis(s_before, 0, 1)             # [B,NC,H,N,P]
+
+    # inter-chunk: y_i += exp(cums_i)·(C_i · S_prev)
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp", cr.astype(jnp.bfloat16),
+        s_before.astype(jnp.bfloat16),
+        jnp.exp(cums).astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32)
+    s_final = (s_before[:, -1] * chunk_decay[:, -1][:, :, None, None]
+               + sc[:, -1])
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y[:, :l_orig], s_final
+
+
+def mamba2_train(params, cfg: ModelConfig, u, return_state: bool = False):
+    """u: [B, L, d_model] → [B, L, d_model] (also used for prefill fwd).
+
+    Compute policy (§Perf cell C, iteration 3): the bulk tensors (conv,
+    gating, SSD operands) stay in the activation dtype (bf16); only the
+    numerically-sensitive small tensors — dt softplus, log-decay cumsum,
+    inter-chunk state — run f32, with f32 MXU accumulation everywhere.
+    """
+    d_in, h, p, n = _dims(cfg)
+    bsz, l, _ = u.shape
+    z, xbc, dt = _split_proj(params, cfg, u)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    x = xbc[..., :d_in].reshape(bsz, l, h, p)
+    b_mat = xbc[..., d_in : d_in + n]
+    c_mat = xbc[..., d_in + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    # §Perf cell C iteration 1: the z/x/B/C/dt slices of the fused in_proj
+    # do not align with the model-axis shards, so without explicit
+    # constraints the SSD intermediates (decay tensors ∝ B·NC·Q²·H)
+    # replicate. Pin the head axis to "model" and batch to "data".
+    from repro.parallel.sharding import maybe_shard
+    x = maybe_shard(x, "data", None, "model", None)
+    dt = maybe_shard(dt, "data", None, "model")
+    b_mat = maybe_shard(b_mat, "data", None, None)
+    c_mat = maybe_shard(c_mat, "data", None, None)
+    y, s_final = _ssd_chunked(x, dt, params["A_log"],
+                              b_mat, c_mat, cfg.ssm_chunk)
+    y = y.astype(u.dtype) + (
+        params["D"].astype(u.dtype)[None, None, :, None] * x)
+    y = y.reshape(bsz, l, d_in)
+    y = C.rmsnorm(y, params["norm"]["scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = C.linear(params["out_proj"], y.astype(u.dtype))
+    if return_state:
+        state = {
+            "ssm": s_final,
+            "conv": xbc_raw[:, -(cfg.ssm_conv - 1):, :],
+        }
+        return out, state
+    return out
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    d_in, h, p, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def mamba2_decode(params, cfg: ModelConfig, u, state):
+    """One-token recurrent step. u: [B, 1, d_model]."""
+    d_in, h, p, n = _dims(cfg)
+    bsz = u.shape[0]
+    z, xbc, dt = _split_proj(params, cfg, u)
+
+    # conv state update (state kept in activation dtype)
+    conv_in = jnp.concatenate(
+        [state["conv"].astype(xbc.dtype), xbc], axis=1)  # [B, K, Ch]
+    w = params["conv_w"]
+    out = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32), w) \
+        + params["conv_b"]
+    xbc_t = jax.nn.silu(out)[:, None, :]                     # [B, 1, Ch]
+    new_conv = conv_in[:, 1:, :]
+
+    x = xbc_t[..., :d_in].reshape(bsz, h, p)
+    b_mat = xbc_t[:, 0, d_in : d_in + n]
+    c_mat = xbc_t[:, 0, d_in + n :]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt_t * a[None, :])                          # [B, H]
+    s = state["ssm"] * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt_t, b_mat, x)
+    y = jnp.einsum("bn,bhnp->bhp", c_mat, s)
+    y = y + params["D"][None, :, None] * x
+    y = y.reshape(bsz, 1, d_in)
+    y = C.rmsnorm(y, params["norm"]["scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = C.linear(params["out_proj"], y.astype(u.dtype))
+    return out, {"ssm": s, "conv": new_conv}

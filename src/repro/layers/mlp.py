@@ -1,0 +1,134 @@
+"""Feed-forward layers: SwiGLU / GELU MLP and capacity-based top-k MoE.
+
+The MoE uses sort-based dispatch to per-expert capacity buffers
+([E, C, D]) so that (a) compute is proportional to *active* experts
+(capacity ≈ tokens·top_k/E · factor, not tokens·E), and (b) the expert
+dimension shards cleanly over the "model" mesh axis (expert parallelism:
+XLA SPMD turns the dispatch gather/scatter into all-to-alls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import common as C
+from repro.layers.common import Annotated
+
+__all__ = ["init_mlp", "mlp_apply", "init_moe", "moe_apply"]
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": C.init_linear(ks[0], d_model, d_ff, ("embed", "mlp")),
+        "w_down": C.init_linear(ks[1], d_ff, d_model, ("mlp", "embed")),
+    }
+    if act == "swiglu":
+        p["w_gate"] = C.init_linear(ks[2], d_model, d_ff, ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(params, x, act: str = "swiglu"):
+    up = C.linear(params["w_up"], x)
+    if act == "swiglu":
+        gate = C.linear(params["w_gate"], x)
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return C.linear(params["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = {
+        "router": C.init_linear(ks[0], d, e, ("embed", "experts")),
+        "w_gate": {"w": C.dense_init(ks[1], (e, d, f), ("experts", "embed", "mlp"))},
+        "w_up": {"w": C.dense_init(ks[2], (e, d, f), ("experts", "embed", "mlp"))},
+        "w_down": {"w": C.dense_init(ks[3], (e, f, d), ("experts", "mlp", "embed"))},
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, "swiglu")
+    return p
+
+
+def _expert_linear(slot, xe):
+    """Per-expert projection [E, C, K] → [E, C, N]; fp einsum or vmapped W4Ax."""
+    if "w_packed" in slot:
+        return jax.vmap(C.linear)(slot, xe)
+    return jnp.einsum(
+        "ecd,edf->ecf", xe.astype(jnp.bfloat16),
+        slot["w"].astype(jnp.bfloat16))
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: [B, S, D] → (out, aux_loss). Capacity-dropped top-k routing."""
+    b, s, d = x.shape
+    tkn = x.reshape(b * s, d)
+    t = tkn.shape[0]
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = C.linear(params["router"], tkn).astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)          # renorm
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                                   # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e), axis=1), axis=0)      # [E]
+    aux = jnp.sum(me * ce) * e * cfg.router_aux_loss
+
+    # ---- sort-based dispatch to capacity buffers ----
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(cap, 4)
+    flat_e = gate_idx.reshape(-1)                                  # [T·K]
+    flat_w = gate_vals.reshape(-1)
+    tok_of = jnp.arange(t * k) // k
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)
+    starts = jnp.cumsum(counts) - counts                           # [E]
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)     # drop → OOB
+
+    buf = jnp.zeros((e * cap + 1, d), tkn.dtype)
+    buf = buf.at[slot].set(tkn[tok_of[order]], mode="drop")
+    xe = buf[: e * cap].reshape(e, cap, d)                          # [E, C, D]
+    # EP: experts over "model", capacity over "data" (all-to-all dispatch)
+    from repro.parallel.sharding import maybe_shard
+    xe = maybe_shard(xe, "model", "data", None)
+
+    # ---- expert FFN (einsum over stacked expert weights; EP-shardable) ----
+    ce_dt = xe.astype(jnp.bfloat16)
+    gate = _expert_linear(params["w_gate"], ce_dt)
+    up = _expert_linear(params["w_up"], ce_dt)
+    h = (jax.nn.silu(gate.astype(jnp.float32)) *
+         up.astype(jnp.float32)).astype(jnp.bfloat16)
+    ye = _expert_linear(params["w_down"], h)
+
+    # ---- combine back ----
+    ye_flat = ye.reshape(e * cap, d)
+    gathered = jnp.where(
+        keep[:, None], ye_flat[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    weighted = gathered.astype(jnp.float32) * flat_w[order][:, None]
+    out = jax.ops.segment_sum(weighted, tok_of[order], num_segments=t)
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], tkn, "swiglu").astype(jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype), aux

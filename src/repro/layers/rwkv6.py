@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" block — data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (d = head_dim):
+    y_t = r_t · S_{t-1}  +  (r_t ⊙ u · k_t) · v_t
+    S_t = diag(w_t) · S_{t-1}  +  k_t ⊗ v_t
+with w_t = exp(−exp(w0 + LoRA(x̃_t))) ∈ (0,1) per channel (data-dependent,
+the Finch contribution), u a learned per-channel "bonus" for the current
+token, and x̃ the token-shift interpolation.
+
+Training/prefill uses a chunked parallel form (GLA-style): within chunks
+the recurrence is a masked matmul against cumulative decay products;
+across chunks a lax.scan carries S [B, H, dk, dv]. Decode is the O(1)
+recurrent step. Channel-mix is the squared-ReLU RWKV FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import common as C
+from repro.layers.common import Annotated
+
+__all__ = [
+    "init_rwkv6",
+    "rwkv6_train",
+    "rwkv6_decode",
+    "init_rwkv6_state",
+]
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return d, d // hd, hd
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d, h, hd = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    lora = cfg.rwkv_decay_lora
+
+    def mix(i):
+        return Annotated(
+            jax.random.uniform(ks[i], (d,), jnp.float32, 0.0, 1.0), ("embed",))
+
+    return {
+        # token-shift interpolation coefficients
+        "mu_r": mix(0), "mu_k": mix(1), "mu_v": mix(2),
+        "mu_g": mix(3), "mu_w": mix(4),
+        "w_r": C.init_linear(ks[5], d, d, ("embed", "qdim")),
+        "w_k": C.init_linear(ks[6], d, d, ("embed", "qdim")),
+        "w_v": C.init_linear(ks[7], d, d, ("embed", "qdim")),
+        "w_g": C.init_linear(ks[8], d, d, ("embed", "qdim")),
+        "w_o": C.init_linear(ks[9], d, d, ("qdim", "embed")),
+        # data-dependent decay: w0 + tanh(x̃ A) B
+        "decay_w0": Annotated(
+            jnp.full((d,), -6.0, jnp.float32) +
+            0.5 * jax.random.normal(ks[10], (d,)), ("embed",)),
+        "decay_A": C.dense_init(ks[10], (d, lora), ("embed", None)),
+        "decay_B": C.dense_init(ks[11], (lora, d), (None, "embed"), scale=0.01),
+        "bonus_u": Annotated(
+            0.5 * jax.random.normal(ks[11], (h, hd)), (None, None)),
+        "ln_x": C.init_norm("layernorm", d, ("embed",)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: [B, L, D]; x_prev: [B, 1, D] last token of previous segment."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _projections(params, x, xs):
+    def mixed(mu):
+        return x + (xs - x) * mu[None, None, :]
+
+    r = C.linear(params["w_r"], mixed(params["mu_r"]))
+    k = C.linear(params["w_k"], mixed(params["mu_k"]))
+    v = C.linear(params["w_v"], mixed(params["mu_v"]))
+    g = C.linear(params["w_g"], mixed(params["mu_g"]))
+    xw = mixed(params["mu_w"]).astype(jnp.float32)
+    lw = params["decay_w0"] + jnp.tanh(
+        xw @ params["decay_A"]) @ params["decay_B"]
+    logw = -jnp.exp(lw)                                 # log decay ≤ 0
+    return r, k, v, g, logw
+
+
+def _chunked_linear_attn(r, k, v, logw, u, chunk):
+    """r/k/v: [B, L, H, D]; logw: [B, L, H, D] (log decay); u: [H, D]."""
+    b, l, h, d = r.shape
+    q = min(chunk, l)
+    l_orig = l
+    pad = (-l) % q
+    if pad:
+        # logw=0 (decay=1) + k=0 padding is exact: state unchanged, y=0
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // q
+    rr = r.reshape(b, nc, q, h, d).astype(jnp.float32)
+    kk = k.reshape(b, nc, q, h, d).astype(jnp.float32)
+    vv = v.reshape(b, nc, q, h, d).astype(jnp.float32)
+    # Clamp per-step log-decay at −64/Q so the factored 1/P_s term stays
+    # within f32 exp range for the whole chunk. A channel at the clamp
+    # (w = e^{−64/Q} ≈ 0.6 for Q=128) forgets to ~1e−28 within one chunk,
+    # so this is functionally lossless "instant forget".
+    lw = jnp.maximum(logw.reshape(b, nc, q, h, d), -64.0 / q)
+
+    cum = jnp.cumsum(lw, axis=2)                        # logP_t (inclusive)
+    p_in = jnp.exp(cum - lw)                            # P_{t-1} (exclusive)
+    p_out = jnp.exp(cum[:, :, -1:, :, :] - cum)         # P_Q / P_t
+    p_end = jnp.exp(cum[:, :, -1, :, :])                # P_Q
+
+    # intra-chunk: A[t,s] = ((r_t ⊙ P_{t-1}/P_s) · k_s)  for s < t
+    #              A[t,t] = (r_t ⊙ u) · k_t
+    rp = rr * p_in                                      # r_t ⊙ P_{t-1}
+    kp = kk * jnp.exp(-cum)                             # k_s / P_s (inclusive)
+    scores = jnp.einsum("bcthd,bcshd->bchts", rp, kp)   # s<t part
+    tri = jnp.tril(jnp.ones((q, q), bool), -1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bcthd,hd,bcthd->bcth", rr, u, kk)
+    y_intra = jnp.einsum("bchts,bcshd->bcthd", scores, vv)
+    y_intra += diag[..., None] * vv
+
+    # chunk state contribution: S_c = diag(P_Q) S_{c-1} + Σ_s diag(P_Q/P_s) k_s ⊗ v_s
+    s_chunk = jnp.einsum("bcshd,bcshe->bchde", kk * p_out, vv)
+
+    def scan_fn(s_prev, inp):
+        s_c, dec = inp
+        return s_prev * dec[..., None] + s_c, s_prev
+
+    _, s_before = jax.lax.scan(
+        scan_fn,
+        jnp.zeros((b, h, d, d), jnp.float32),
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(p_end, 1, 0)),
+    )
+    s_before = jnp.moveaxis(s_before, 0, 1)             # [B,NC,H,D,D]
+    y_inter = jnp.einsum("bcthd,bchde->bcthe", rp, s_before)
+    y = (y_intra + y_inter).reshape(b, l, h, d)
+    # final state for the caller (prefill → decode handoff)
+    last_dec = p_end[:, -1]
+    s_final = s_before[:, -1] * last_dec[..., None] + s_chunk[:, -1]
+    return y[:, :l_orig], s_final
+
+
+def rwkv6_train(params, cfg: ModelConfig, x, state=None):
+    """Time-mix + output. x: [B, L, D] → (y [B, L, D], final state)."""
+    d, h, hd = _dims(cfg)
+    b, l, _ = x.shape
+    x_prev = (state["shift_tm"] if state is not None
+              else jnp.zeros((b, 1, d), x.dtype))
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, logw = _projections(params, x, xs)
+    rr = r.reshape(b, l, h, hd)
+    kk = k.reshape(b, l, h, hd)
+    vv = v.reshape(b, l, h, hd)
+    lw = logw.reshape(b, l, h, hd)
+    y, s_final = _chunked_linear_attn(
+        rr, kk, vv, lw, params["bonus_u"], cfg.ssm_chunk or 128)
+    y = y.reshape(b, l, d)
+    y = C.layernorm(y, params["ln_x"]["scale"], params["ln_x"]["bias"],
+                    cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = C.linear(params["w_o"], y.astype(x.dtype))
+    new_state = {"s": s_final, "shift_tm": x[:, -1:, :]}
+    return out, new_state
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d, h, hd = _dims(cfg)
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, 1, d), dtype),
+        "shift_cm": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def rwkv6_decode(params, cfg: ModelConfig, x, state):
+    """One-token step. x: [B, 1, D]."""
+    d, h, hd = _dims(cfg)
+    b = x.shape[0]
+    xs = state["shift_tm"]
+    r, k, v, g, logw = _projections(params, x, xs)
+    rr = r.reshape(b, h, hd).astype(jnp.float32)
+    kk = k.reshape(b, h, hd).astype(jnp.float32)
+    vv = v.reshape(b, h, hd).astype(jnp.float32)
+    q = cfg.ssm_chunk or 128                            # match train clamp
+    w = jnp.exp(jnp.maximum(logw.reshape(b, h, hd), -64.0 / q))
+    u = params["bonus_u"]
+    s = state["s"]
+    kv = jnp.einsum("bhd,bhe->bhde", kk, vv)
+    y = jnp.einsum("bhd,bhde->bhe", rr, s) + jnp.einsum(
+        "bhd,hd,bhde->bhe", rr, u, kv)
+    s_new = s * w[..., None] + kv
+    y = y.reshape(b, 1, d)
+    y = C.layernorm(y, params["ln_x"]["scale"], params["ln_x"]["bias"],
+                    cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = C.linear(params["w_o"], y.astype(x.dtype))
+    new_state = dict(state)
+    new_state["s"] = s_new
+    new_state["shift_tm"] = x
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Channel-mix (RWKV FFN)
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_cmix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Annotated(
+            jax.random.uniform(ks[0], (d,), jnp.float32, 0.0, 1.0), ("embed",)),
+        "mu_r": Annotated(
+            jax.random.uniform(ks[1], (d,), jnp.float32, 0.0, 1.0), ("embed",)),
+        "w_k": C.init_linear(ks[1], d, cfg.d_ff, ("embed", "mlp")),
+        "w_v": C.init_linear(ks[2], cfg.d_ff, d, ("mlp", "embed")),
+        "w_r": C.init_linear(ks[2], d, d, ("embed", "qdim")),
+    }
+
+
+def rwkv6_cmix(params, cfg: ModelConfig, x, x_prev):
+    """x: [B, L, D]; x_prev: [B, 1, D] → (y, new shift = x[:, -1:])."""
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * params["mu_k"][None, None, :]
+    xr = x + (xs - x) * params["mu_r"][None, None, :]
+    k = jnp.square(jax.nn.relu(C.linear(params["w_k"], xk)))
+    kv = C.linear(params["w_v"], k)
+    return jax.nn.sigmoid(
+        C.linear(params["w_r"], xr).astype(jnp.float32)
+    ).astype(x.dtype) * kv, x[:, -1:, :]

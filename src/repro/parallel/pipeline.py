@@ -1,0 +1,74 @@
+"""GPipe-style pipeline parallelism over a stage-stacked layer stack.
+
+For >2-pod scaling the layer dimension becomes the natural third
+parallelism axis. This module implements the standard single-program
+JAX pipelining pattern: layers are split into S equal stages whose
+parameters carry a leading stage axis (sharded over the mesh's "stage"
+axis); every pipeline tick runs all stages in parallel via vmap (each
+stage on its own devices under SPMD) and shifts activations one stage
+down — the shift lowers to a `collective_permute` between stage shards.
+A microbatched input stream of M microbatches drains in M + S − 1 ticks
+(the classic GPipe bubble of (S−1)/(M+S−1)).
+
+This composes with the existing DP/TP axes: the mesh becomes
+(stage, data, model) and the per-stage block params keep their TP specs.
+
+`pipeline_apply` is family-agnostic: it takes any per-layer block apply
+function (signature (block_params, x) → x) and the scanned layer stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["stage_params", "pipeline_apply"]
+
+
+def stage_params(stacked_params, num_stages: int):
+    """[L, ...] layer-stacked tree → [S, L/S, ...] stage-stacked tree."""
+    def reshape(a):
+        l = a.shape[0]
+        assert l % num_stages == 0, (l, num_stages)
+        return a.reshape(num_stages, l // num_stages, *a.shape[1:])
+    return jax.tree.map(reshape, stacked_params)
+
+
+def pipeline_apply(block_fn, staged_params, x_micro, *, unroll_stage=False):
+    """Run the pipeline. x_micro: [M, mb, ...] microbatched activations.
+
+    block_fn(block_params, x) applies ONE layer; each stage applies its
+    L/S layers with an inner lax.scan. Returns [M, mb, ...] outputs.
+    """
+    num_stages = jax.tree.leaves(staged_params)[0].shape[0]
+    m = x_micro.shape[0]
+    ticks = m + num_stages - 1
+    mb_shape = x_micro.shape[1:]
+
+    def stage_apply(params_s, h):
+        def body(h, bp):
+            return block_fn(bp, h), None
+        h, _ = jax.lax.scan(body, h, params_s)
+        return h
+
+    v_stage = jax.vmap(stage_apply)          # over the stage axis
+
+    def tick(carry, t):
+        prev_outs = carry                     # [S, mb, ...] last tick's outs
+        # stage 0 ingests microbatch t (zeros once the stream is drained);
+        # stage s>0 ingests stage s-1's previous output — a shift that
+        # lowers to a collective_permute between stage shards under SPMD.
+        nxt = jnp.where(t < m, x_micro[jnp.minimum(t, m - 1)],
+                        jnp.zeros(mb_shape, x_micro.dtype))
+        bufs = jnp.concatenate([nxt[None], prev_outs[:-1]], axis=0)
+        outs = v_stage(staged_params, bufs)   # all stages advance together
+        return outs, outs[-1]                 # last stage's output each tick
+
+    outs0 = jnp.zeros((num_stages, *mb_shape), x_micro.dtype)
+    _, drained = jax.lax.scan(tick, outs0, jnp.arange(ticks))
+    # microbatch i enters stage 0 at tick i and exits at tick i + S - 1
+    return drained[num_stages - 1:]
+
+
+def pipeline_bubble_fraction(num_stages: int, num_micro: int) -> float:
+    return (num_stages - 1) / (num_micro + num_stages - 1)

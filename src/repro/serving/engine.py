@@ -1,0 +1,215 @@
+"""COMET serving engine: continuous batching over the paged KV4 cache.
+
+The engine is the paper's §5 system layer: W4Ax projections + int4 paged
+KV + vLLM-style scheduling. Unlike the scanned `LM.decode` (used for the
+compile-time dry-run), the engine walks layers in a Python loop so each
+layer's attention reads/writes the *paged* pool directly — the realistic
+serving dataflow (gather pages → KV4 flash-decode → append one token).
+
+Supported families here: dense, moe (the paper's evaluation set —
+LLaMA/Qwen/Mistral class + MoE). Hybrid/ssm decode serve through
+``LM.decode`` (their state is O(1) — paging buys nothing).
+
+Fault tolerance: ``snapshot()`` captures scheduler state; ``Engine.
+restore`` rebuilds mid-flight work after a crash (prompts re-prefill; the
+sampler is keyed by (request_id, position) so regenerated text is
+identical).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import qlinear as QL
+from repro.kernels import ops
+from repro.layers import attention as ATT
+from repro.layers import common as C
+from repro.layers import mlp as MLP
+from repro.models.lm import LM, QuantConfig
+from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 32
+    num_pages: int = 512
+    page_size: int = 64
+    max_pages_per_seq: int = 64
+    temperature: float = 0.0        # 0 → greedy
+    top_k: int = 40
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, qparams, quant: QuantConfig,
+                 ecfg: EngineConfig = EngineConfig()):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged engine supports dense/moe; {cfg.family} serves via "
+                "LM.decode")
+        self.cfg = cfg
+        self.quant = quant
+        self.lm = LM(cfg, quant=quant)
+        self.params = qparams
+        self.ecfg = ecfg
+        self.cache = PagedKV4Cache(
+            cfg,
+            PagedKV4Config(
+                num_pages=ecfg.num_pages, page_size=ecfg.page_size,
+                max_seqs=ecfg.max_batch * 2,
+                max_pages_per_seq=ecfg.max_pages_per_seq),
+            num_layer_slots=cfg.num_layers)
+        self.sched = Scheduler(ecfg.max_batch, ecfg.max_batch * 2)
+        self.steps = 0
+        self.tokens_generated = 0
+
+    # ------------------------------------------------------------------ API
+
+    def add_request(self, request_id: int, prompt: list[int],
+                    max_new_tokens: int):
+        self.sched.submit(Request(
+            request_id=request_id, prompt=list(prompt),
+            max_new_tokens=max_new_tokens, arrived_at=time.time()))
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        while self.sched.has_work and self.steps < max_steps:
+            self.step()
+        return self.sched.finished
+
+    def snapshot(self) -> str:
+        return self.sched.snapshot()
+
+    @classmethod
+    def restore(cls, blob: str, cfg, qparams, quant,
+                ecfg: EngineConfig = EngineConfig()) -> "Engine":
+        eng = cls(cfg, qparams, quant, ecfg)
+        eng.sched = Scheduler.restore(blob, ecfg.max_batch,
+                                      ecfg.max_batch * 2)
+        return eng
+
+    # ----------------------------------------------------------------- step
+
+    def step(self):
+        self.steps += 1
+        admitted = self.sched.admit(self.cache)
+        for req in admitted:
+            self._prefill(req)
+        runnable = [r for r in self.sched.running if r.prefilled]
+        if runnable:
+            # page headroom: preempt until every runnable seq can extend
+            i = 0
+            while i < len(runnable):
+                if not self.cache.extend_seq(runnable[i].seq_slot):
+                    victim = self.sched.preempt_one(self.cache)
+                    if victim in runnable:
+                        runnable.remove(victim)
+                    continue
+                i += 1
+            if runnable:
+                self._decode_batch(runnable)
+        for req in list(self.sched.running):
+            if req.done:
+                self.sched.complete(req, self.cache)
+
+    # ------------------------------------------------------------- internals
+
+    def _sample(self, logits: np.ndarray, request_id: int,
+                position: int) -> int:
+        if self.ecfg.temperature <= 0.0:
+            return int(np.argmax(logits))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), request_id), position)
+        lg = jnp.asarray(logits) / self.ecfg.temperature
+        topv, topi = jax.lax.top_k(lg, self.ecfg.top_k)
+        idx = jax.random.categorical(key, topv)
+        return int(topi[idx])
+
+    def _block_params(self, li: int):
+        return jax.tree.map(lambda a: a[li], self.params["blocks"])
+
+    def _prefill(self, req: Request):
+        cfg = self.cfg
+        with self.lm._ctx():
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            x = self.lm._embed(self.params, tokens)
+            positions = jnp.arange(len(req.prompt))[None, :]
+            for li in range(cfg.num_layers):
+                bp = self._block_params(li)
+                h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+                q, k, v = ATT._project_qkv(
+                    bp["attn"], cfg, h, h, positions, positions)
+                a = ATT.flash_attention(q, k, v, causal=cfg.causal)
+                self.cache.write_prompt(li, req.seq_slot, k, v)
+                a = a.astype(x.dtype).reshape(1, -1, cfg.q_dim)
+                x = x + C.linear(bp["attn"]["wo"], a)
+                h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+                if "moe" in bp:
+                    y, _ = MLP.moe_apply(bp["moe"], h, cfg)
+                else:
+                    y = MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                x = x + y
+            hN = C.apply_norm(self.params["final_norm"], x[:, -1:],
+                              cfg.norm, cfg.norm_eps)
+            logits = self.lm._head(self.params, hN)
+        tok = self._sample(np.asarray(logits[0, -1]), req.request_id,
+                           len(req.prompt))
+        self.cache.extend_seq(req.seq_slot)
+        req.generated.append(tok)
+        req.prefilled = True
+        self.tokens_generated += 1
+
+    def _decode_batch(self, reqs: list[Request]):
+        cfg = self.cfg
+        slots = [r.seq_slot for r in reqs]
+        last = jnp.asarray([[r.generated[-1]] for r in reqs], jnp.int32)
+        max_len = int(self.cache.seq_len[slots].max()) + 1
+
+        lengths_np = self.cache.seq_len[slots].copy()
+        with self.lm._ctx():
+            x = self.lm._embed(self.params, last)
+            positions = jnp.asarray(lengths_np)[:, None]
+            for li in range(cfg.num_layers):
+                bp = self._block_params(li)
+                h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+                q, k, v = ATT._project_qkv(
+                    bp["attn"], cfg, h, h, positions, positions)
+                # write the new token's KV into its page, then gather+attend
+                for bi, r in enumerate(reqs):
+                    self.cache.append_token(
+                        li, r.seq_slot, k[bi:bi+1], v[bi:bi+1],
+                        pos=lengths_np[bi])
+                kp, vp, _ = self.cache.gather_kv(li, slots, max_len)
+                bsz = len(reqs)
+                bcast = lambda s: jnp.broadcast_to(
+                    s[None], (bsz, *s.shape))
+                out = ops.kv4_decode_attention(
+                    q[:, 0], kp, bcast(self.cache.k_scale),
+                    bcast(self.cache.k_zero), vp,
+                    bcast(self.cache.v_scale), bcast(self.cache.v_zero),
+                    jnp.asarray(lengths_np) + 1,
+                    impl=self.quant.impl)
+                out = out.reshape(bsz, 1, cfg.q_dim).astype(x.dtype)
+                x = x + C.linear(bp["attn"]["wo"], out)
+                h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+                if "moe" in bp:
+                    y, _ = MLP.moe_apply(bp["moe"], h, cfg)
+                else:
+                    y = MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                x = x + y
+            hN = C.apply_norm(self.params["final_norm"], x,
+                              cfg.norm, cfg.norm_eps)
+            logits = np.asarray(self.lm._head(self.params, hN))
+        self.cache.advance(slots)
+        for bi, r in enumerate(reqs):
+            tok = self._sample(logits[bi, -1], r.request_id, r.total_len)
+            r.generated.append(tok)
+            self.tokens_generated += 1

@@ -1,0 +1,179 @@
+"""Paged KV4 cache — vLLM-style block tables over packed int4 storage.
+
+The physical pool is ``[num_pages, page_size, Hkv, D/2]`` uint8 per layer
+stack (one K pool + one V pool, layers stacked on the leading axis).
+Sequences own pages through a block table ``[max_seqs, max_pages]`` int32
+(-1 = unmapped). Appending a token touches exactly one page; eviction
+frees whole pages. Per-channel scales/zeros are static (calibrated), so
+pages never need rescaling — the property that makes int4 paging cheap.
+
+The gather path (`gather_kv`) materializes a sequence's packed KV
+contiguously for the decode-attention kernel; on TPU this is the paged
+indirection the paper inherits from vLLM [15], kept outside the kernel so
+the same Pallas kernel serves paged and contiguous caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["PagedKV4Config", "PagedKV4Cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKV4Config:
+    num_pages: int
+    page_size: int = 64
+    max_seqs: int = 64
+    max_pages_per_seq: int = 128
+
+
+class PagedKV4Cache:
+    """Host-managed page allocator + device-resident pools.
+
+    Allocation/free run in Python (the engine's scheduler thread);
+    device ops (append, gather) are jittable pure functions over the
+    pool arrays.
+    """
+
+    def __init__(self, cfg: ModelConfig, pcfg: PagedKV4Config,
+                 num_layer_slots: int,
+                 k_stats=None, v_stats=None):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        hkv, d = cfg.num_kv_heads, cfg.head_dim
+        shape = (num_layer_slots, pcfg.num_pages, pcfg.page_size, hkv, d // 2)
+        self.k_pool = jnp.zeros(shape, jnp.uint8)
+        self.v_pool = jnp.zeros(shape, jnp.uint8)
+
+        def default_stats(rng):
+            scale = jnp.full((hkv, 1, d), rng / 15.0, jnp.float32)
+            zero = jnp.full((hkv, 1, d), 7.5, jnp.float32)
+            return scale, zero
+
+        self.k_scale, self.k_zero = k_stats or default_stats(16.0)
+        self.v_scale, self.v_zero = v_stats or default_stats(16.0)
+
+        self.block_table = np.full(
+            (pcfg.max_seqs, pcfg.max_pages_per_seq), -1, np.int32)
+        self.seq_len = np.zeros((pcfg.max_seqs,), np.int32)
+        self.free_pages = list(range(pcfg.num_pages - 1, -1, -1))
+        self.active = set()
+
+    # ------------------------------------------------------------- allocator
+
+    @property
+    def pages_free(self) -> int:
+        return len(self.free_pages)
+
+    def pages_needed(self, tokens: int) -> int:
+        ps = self.pcfg.page_size
+        return (tokens + ps - 1) // ps
+
+    def allocate_seq(self, seq_id: int, prompt_len: int) -> bool:
+        """Reserve pages for a prompt; False if pool exhausted."""
+        need = self.pages_needed(prompt_len)
+        if need > len(self.free_pages) or seq_id in self.active:
+            return False
+        pages = [self.free_pages.pop() for _ in range(need)]
+        self.block_table[seq_id, :need] = pages
+        self.seq_len[seq_id] = 0
+        self.active.add(seq_id)
+        return True
+
+    def extend_seq(self, seq_id: int) -> bool:
+        """Ensure capacity for one more token; may grab a new page."""
+        ln = int(self.seq_len[seq_id])
+        need = self.pages_needed(ln + 1)
+        have = int((self.block_table[seq_id] >= 0).sum())
+        if need <= have:
+            return True
+        if not self.free_pages or need > self.pcfg.max_pages_per_seq:
+            return False
+        self.block_table[seq_id, have] = self.free_pages.pop()
+        return True
+
+    def free_seq(self, seq_id: int):
+        pages = self.block_table[seq_id]
+        for p in pages[pages >= 0]:
+            self.free_pages.append(int(p))
+        self.block_table[seq_id, :] = -1
+        self.seq_len[seq_id] = 0
+        self.active.discard(seq_id)
+
+    # ------------------------------------------------------------- device ops
+
+    def quantize_kv(self, k, v):
+        """[..., T, Hkv→axis2?]— k/v: [B, T, Hkv, D] float → packed [B, Hkv, T, D/2]."""
+        def pack(x, scale, zero):
+            xt = x.swapaxes(1, 2).astype(jnp.float32)      # [B, Hkv, T, D]
+            n = jnp.clip(jnp.round(xt / scale + zero), 0, 15).astype(jnp.uint8)
+            half = n.shape[-1] // 2
+            return (n[..., :half] | (n[..., half:] << 4)).astype(jnp.uint8)
+        return (pack(k, self.k_scale, self.k_zero),
+                pack(v, self.v_scale, self.v_zero))
+
+    def write_prompt(self, layer_slot: int, seq_id: int, k, v):
+        """Write a prompt's packed KV ([1, T, Hkv, D] float) into pages."""
+        kp, vp = self.quantize_kv(k, v)                    # [1, Hkv, T, D/2]
+        t = kp.shape[2]
+        ps = self.pcfg.page_size
+        need = self.pages_needed(t)
+        pad = need * ps - t
+        kp = jnp.pad(kp, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # [Hkv, need, ps, D/2] → per page [ps, Hkv, D/2]
+        kp = kp[0].reshape(kp.shape[1], need, ps, -1).swapaxes(0, 1)
+        vp = vp[0].reshape(vp.shape[1], need, ps, -1).swapaxes(0, 1)
+        kp = kp.swapaxes(1, 2)                              # [need, ps, Hkv, D/2]
+        vp = vp.swapaxes(1, 2)
+        pages = self.block_table[seq_id, :need]
+        self.k_pool = self.k_pool.at[layer_slot, pages].set(kp)
+        self.v_pool = self.v_pool.at[layer_slot, pages].set(vp)
+        if layer_slot == 0:
+            self.seq_len[seq_id] = t
+
+    def append_token(self, layer_slot: int, seq_id: int, k, v,
+                     pos: Optional[int] = None):
+        """Write one token's KV ([1, 1, Hkv, D] float) at position ``pos``
+        (default: current seq_len). Does NOT advance seq_len — call
+        :meth:`advance` once after all layers have written."""
+        kp, vp = self.quantize_kv(k, v)                     # [1, Hkv, 1, D/2]
+        ln = int(self.seq_len[seq_id]) if pos is None else int(pos)
+        ps = self.pcfg.page_size
+        page = int(self.block_table[seq_id, ln // ps])
+        off = ln % ps
+        self.k_pool = self.k_pool.at[layer_slot, page, off].set(
+            kp[0, :, 0, :])
+        self.v_pool = self.v_pool.at[layer_slot, page, off].set(
+            vp[0, :, 0, :])
+
+    def advance(self, seq_ids):
+        for s in np.atleast_1d(seq_ids):
+            self.seq_len[s] += 1
+
+    def gather_kv(self, layer_slot: int, seq_ids, max_len: int):
+        """Materialize packed KV for a decode batch.
+
+        → (k_packed, v_packed) [B, Hkv, max_len, D/2] plus lengths [B].
+        Unmapped pages read page 0 but are masked by length in attention.
+        """
+        ps = self.pcfg.page_size
+        npages = (max_len + ps - 1) // ps
+        tables = jnp.asarray(
+            np.where(self.block_table[seq_ids, :npages] < 0, 0,
+                     self.block_table[seq_ids, :npages]))
+        kp = self.k_pool[layer_slot][tables]    # [B, npages, ps, Hkv, D/2]
+        vp = self.v_pool[layer_slot][tables]
+        b = kp.shape[0]
+        kp = kp.reshape(b, npages * ps, *kp.shape[3:]).swapaxes(1, 2)
+        vp = vp.reshape(b, npages * ps, *vp.shape[3:]).swapaxes(1, 2)
+        lengths = jnp.asarray(self.seq_len[seq_ids])
+        return kp[:, :, :max_len], vp[:, :, :max_len], lengths

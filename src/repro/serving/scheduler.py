@@ -1,0 +1,144 @@
+"""Continuous-batching request scheduler with preemption + fault recovery.
+
+COMET's end-to-end win (paper Fig. 11/12) comes from KV4 admitting larger
+decode batches under a fixed memory budget; this scheduler is where that
+batch is formed. Policy (vLLM-style):
+
+* FCFS admission: a waiting request is admitted when the paged pool can
+  hold its prompt plus one page of headroom.
+* decode batch = all running sequences (up to ``max_batch``);
+* on pool exhaustion the *youngest* running sequence is preempted back to
+  the waiting queue (its pages freed — recomputed on re-admission);
+* ``snapshot``/``restore`` serialize scheduler state so an engine restart
+  (node failure) resumes with pending work intact — generated text is
+  reproducible because sampling is keyed by (request_id, position).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import deque
+from typing import Optional
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: list                   # token ids
+    max_new_tokens: int
+    arrived_at: float = 0.0
+    generated: list = dataclasses.field(default_factory=list)
+    seq_slot: int = -1             # cache slot when running
+    prefilled: bool = False
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+
+class Scheduler:
+    def __init__(self, max_batch: int, max_seqs: int):
+        self.max_batch = max_batch
+        self.max_seqs = max_seqs
+        self.waiting: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.finished: list[Request] = []
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+        self.preemptions = 0
+
+    # ----------------------------------------------------------------- queue
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def admit(self, cache) -> list[Request]:
+        """Admit waiting requests while pages + slots are available."""
+        admitted = []
+        while (self.waiting and self._free_slots
+               and len(self.running) < self.max_batch):
+            req = self.waiting[0]
+            need = cache.pages_needed(len(req.prompt)) + 1
+            if need > cache.pages_free:
+                break
+            slot = self._free_slots.pop()
+            if not cache.allocate_seq(slot, len(req.prompt)):
+                self._free_slots.append(slot)
+                break
+            req.seq_slot = slot
+            req.prefilled = False
+            self.waiting.popleft()
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    def preempt_one(self, cache) -> Optional[Request]:
+        """Evict the youngest running sequence to the waiting queue."""
+        if not self.running:
+            return None
+        req = max(self.running, key=lambda r: r.arrived_at)
+        self.running.remove(req)
+        cache.free_seq(req.seq_slot)
+        self._free_slots.append(req.seq_slot)
+        req.seq_slot = -1
+        req.prefilled = False
+        # keep generated text: re-admission prefills prompt+generated
+        req.prompt = req.prompt + req.generated
+        req.max_new_tokens -= len(req.generated)
+        req.generated = []
+        self.waiting.appendleft(req)
+        self.preemptions += 1
+        return req
+
+    def complete(self, req: Request, cache):
+        self.running.remove(req)
+        cache.free_seq(req.seq_slot)
+        self._free_slots.append(req.seq_slot)
+        req.seq_slot = -1
+        self.finished.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------- fault tolerance
+
+    def snapshot(self) -> str:
+        """Serialize pending work (running seqs are demoted to waiting —
+        their device KV is lost on failure and recomputed on restore)."""
+        reqs = []
+        for r in list(self.waiting) + self.running:
+            reqs.append({
+                "request_id": r.request_id,
+                "prompt": list(r.prompt) + list(r.generated),
+                "max_new_tokens": r.max_new_tokens - len(r.generated),
+                "arrived_at": r.arrived_at,
+            })
+        done = [{
+            "request_id": r.request_id,
+            "prompt": list(r.prompt),
+            "generated": list(r.generated),
+        } for r in self.finished]
+        return json.dumps({"pending": reqs, "finished": done})
+
+    @classmethod
+    def restore(cls, blob: str, max_batch: int, max_seqs: int) -> "Scheduler":
+        state = json.loads(blob)
+        sched = cls(max_batch, max_seqs)
+        for r in state["pending"]:
+            sched.submit(Request(
+                request_id=r["request_id"], prompt=r["prompt"],
+                max_new_tokens=r["max_new_tokens"],
+                arrived_at=r["arrived_at"]))
+        for r in state["finished"]:
+            req = Request(request_id=r["request_id"], prompt=r["prompt"],
+                          max_new_tokens=0)
+            req.generated = r["generated"]
+            sched.finished.append(req)
+        return sched

@@ -1,0 +1,153 @@
+"""Fault-tolerant sharded checkpointing (no orbax).
+
+Layout (mesh-agnostic — reshardable on restore to any divisor mesh):
+
+  <dir>/step_<N>/
+      manifest.json        tree structure, dtypes, shapes, step, PRNG key
+      arr_<idx>.npy        one .npy per leaf (host-gathered logical array)
+      _COMPLETE            atomic commit marker (written last)
+
+Design points for 1000+-node operation:
+* atomic commit: writers stage into ``step_<N>.tmp`` then ``rename`` —
+  a crash mid-save never corrupts the latest valid checkpoint;
+* restore scans for the newest ``_COMPLETE``-marked step (auto-recovery
+  after preemption);
+* async save: ``save_async`` snapshots device arrays then writes on a
+  background thread so the train loop is not blocked;
+* keep-last-K garbage collection.
+
+On a real multi-host fleet each host writes only its addressable shards;
+here (single host) the gather is the identity. The manifest format keeps
+per-leaf logical shapes so loading under a different mesh simply applies
+the new NamedSharding at ``device_put`` time.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "cleanup"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(treedef):
+    return str(treedef)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
+    """Blocking checkpoint write with atomic commit."""
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+        if hasattr(jax.tree_util.tree_structure(tree), "serialize_using_proto")
+        else None,
+        "num_leaves": len(leaves),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
+        manifest["leaves"].append(
+            {"dtype": str(arr.dtype), "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+_ASYNC_THREAD: Optional[threading.Thread] = None
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
+    """Snapshot to host, then write in a background thread."""
+    global _ASYNC_THREAD
+    wait_async()
+    host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+    _ASYNC_THREAD = threading.Thread(
+        target=save, args=(ckpt_dir, step, host_tree, extra), daemon=True)
+    _ASYNC_THREAD.start()
+    return _ASYNC_THREAD
+
+
+def wait_async():
+    global _ASYNC_THREAD
+    if _ASYNC_THREAD is not None:
+        _ASYNC_THREAD.join()
+        _ASYNC_THREAD = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "_COMPLETE")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional matching tree of NamedShardings — arrays are
+    device_put with them (elastic resharding across mesh changes).
+    Returns (tree, extra_dict, step).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_t, treedef = jax.tree.flatten(template)
+    assert len(leaves_t) == manifest["num_leaves"], (
+        f"checkpoint has {manifest['num_leaves']} leaves, template "
+        f"{len(leaves_t)}")
+    sh_leaves = (jax.tree.flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves_t))
+    out = []
+    for i, (tmpl, sh) in enumerate(zip(leaves_t, sh_leaves)):
+        arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+        assert list(arr.shape) == list(tmpl.shape), (
+            f"leaf {i}: ckpt {arr.shape} vs template {tmpl.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    tree = jax.tree.unflatten(treedef, out)
+    return tree, manifest.get("extra", {}), step
+
+
+def cleanup(ckpt_dir: str, keep_last: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, n, "_COMPLETE")))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

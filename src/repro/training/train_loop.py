@@ -1,0 +1,96 @@
+"""Training step construction: chunked cross-entropy loss, remat, and the
+pjit-ready ``train_step`` used by both the launcher and the dry-run.
+
+The vocabulary-chunked loss never materializes the full [B, S, V] logits
+tensor: the final projection + softmax-CE run per sequence chunk inside a
+rematerialized scan, keeping the live logits buffer at [B, chunk, V] —
+the difference between fitting and OOM for 150k-vocab × 4k-seq training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+from repro.training import optimizer as OPT
+
+__all__ = ["cross_entropy", "chunked_lm_loss", "make_train_step",
+           "make_loss_fn"]
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [..., V] f32, labels [...] int32 → mean CE (masked)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if mask is not None:
+        ce = ce * mask
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def chunked_lm_loss(lm: LM, params, hidden, labels, mask=None,
+                    chunk: int = 512):
+    """hidden [B, S, D] (post final-norm) → scalar CE without full logits."""
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    mask_full = mask if mask is not None else jnp.ones((b, s), jnp.float32)
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask_full = jnp.pad(mask_full, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nc, chunk, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask_full.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, l, m = xs
+        logits = lm._head(params, h)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * m
+        return (tot + jnp.sum(ce), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(lm: LM, *, loss_chunk: int = 512):
+    def loss_fn(params, batch):
+        extra = {k: batch[k] for k in ("frames", "image_embeds")
+                 if k in batch} or None
+        hidden, aux = lm.train_hidden(params, batch["tokens"], extra)
+        ce = chunked_lm_loss(lm, params, hidden, batch["labels"],
+                             batch.get("mask"), chunk=loss_chunk)
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(lm: LM, opt_cfg: OPT.AdamWConfig, *,
+                    loss_chunk: int = 512):
+    """Build ``train_step(params, opt_state, batch) → (params, state, metrics)``.
+
+    batch: {"tokens": [B, S] int32, "labels": [B, S] int32,
+            optional "mask": [B, S] f32, optional "frames"/"image_embeds"}.
+    """
+    loss_fn = make_loss_fn(lm, loss_chunk=loss_chunk)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = OPT.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step

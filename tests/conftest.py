@@ -1,0 +1,11 @@
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""FMPQ algorithm invariants (hypothesis) + GEMM equivalence."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fmpq
+from repro.core import quantizer as Q
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(2, 8), st.integers(0, 40), st.integers(0, 2**31 - 1))
+def test_plan_invariants(nblocks, n_outliers, seed):
+    rng = np.random.default_rng(seed)
+    k = nblocks * 128
+    n_outliers = min(n_outliers, k)
+    absmax = rng.uniform(0.5, 1.5, size=k)
+    idx = rng.choice(k, n_outliers, replace=False)
+    absmax[idx] *= 100.0
+    plan = fmpq.plan_fmpq(absmax)
+    # permutation is a bijection
+    assert sorted(plan.perm.tolist()) == list(range(k))
+    np.testing.assert_array_equal(plan.perm[plan.inv_perm], np.arange(k))
+    # int8 blocks are the tail and exactly cover the outliers
+    bits = plan.block_bits
+    assert (bits[: plan.num_int4_blocks] == 4).all()
+    assert (bits[plan.num_int4_blocks:] == 8).all()
+    expected_int8 = int(np.ceil(n_outliers / 128)) if n_outliers else 0
+    assert plan.num_blocks - plan.num_int4_blocks == expected_int8
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_permutation_gemm_equivalence(seed):
+    """x @ w == x[:, perm] @ w[perm, :] (up to fp summation order)."""
+    rng = np.random.default_rng(seed)
+    k = 256
+    x = rng.normal(size=(8, k)).astype(np.float64)
+    w = rng.normal(size=(k, 16)).astype(np.float64)
+    absmax = np.abs(x).max(0)
+    plan = fmpq.plan_fmpq(absmax, fmpq.FMPQConfig(outlier_threshold=2.0))
+    np.testing.assert_allclose(
+        x @ w, x[:, plan.perm] @ w[plan.perm, :], rtol=1e-9, atol=1e-9)
+
+
+def test_outlier_ratio_beats_unpermuted():
+    """Clustering outliers reduces INT8 blocks vs no permutation (§3.2)."""
+    rng = np.random.default_rng(7)
+    k = 1024
+    absmax = rng.uniform(0.5, 1.5, size=k)
+    outliers = rng.choice(k, 30, replace=False)  # spread over many blocks
+    absmax[outliers] *= 50
+    mask = fmpq.identify_outlier_channels(absmax)
+    unpermuted_int8 = int(
+        (mask.reshape(-1, 128).any(1)).sum())
+    plan = fmpq.plan_fmpq(absmax)
+    permuted_int8 = plan.num_blocks - plan.num_int4_blocks
+    assert permuted_int8 <= unpermuted_int8
+    assert permuted_int8 == 1            # 30 outliers fit one block
+    assert plan.int4_fraction >= 0.8     # paper: >84% W4A4
+
+
+def test_mixed_quant_better_than_naive_w4a4():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(256, 512)).astype(np.float32)
+    ch = rng.choice(512, 12, replace=False)
+    x[:, ch] *= 40
+    w = (rng.normal(size=(512, 128)) * 0.05).astype(np.float32)
+    exact = x @ w
+    plan = fmpq.plan_fmpq(np.abs(x).max(0))
+    cfg = fmpq.FMPQConfig()
+    wq = fmpq.apply_fmpq_to_weight(jnp.asarray(w), plan, cfg)
+    aq, asc = fmpq.quantize_activation_mixed(jnp.asarray(x), plan, cfg)
+    wd = Q.dequantize_weight_int4(wq, 128)
+    k4 = plan.k4
+    ad4 = np.asarray(aq[:, :k4], np.float32).reshape(256, -1, 128) * \
+        np.asarray(asc[:, :k4 // 128])[:, :, None]
+    ad8 = np.asarray(aq[:, k4:], np.float32).reshape(256, -1, 128) * \
+        np.asarray(asc[:, k4 // 128:])[:, :, None]
+    ad = np.concatenate([ad4.reshape(256, -1), ad8.reshape(256, -1)], 1)
+    out_fmpq = ad @ np.asarray(wd)
+    # naive: all int4, no permutation
+    qn, sn = Q.quantize_act_groupwise(jnp.asarray(x), 128, bits=4)
+    adn = np.asarray(qn, np.float32).reshape(256, -1, 128) * \
+        np.asarray(sn)[:, :, None]
+    wqn = Q.quantize_weight_int4(jnp.asarray(w), group_size=128)
+    out_naive = adn.reshape(256, -1) @ np.asarray(
+        Q.dequantize_weight_int4(wqn, 128))
+    err_fmpq = np.abs(out_fmpq - exact).mean()
+    err_naive = np.abs(out_naive - exact).mean()
+    assert err_fmpq < err_naive * 0.8    # FMPQ clearly better on outliers

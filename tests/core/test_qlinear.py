@@ -1,0 +1,43 @@
+"""QLinear: quantized projection vs explicit dequantized matmul."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fmpq, qlinear as QL
+from repro.core import quantizer as Q
+
+
+def test_qlinear_fraction_matches_manual(rng):
+    k, n, m = 512, 128, 32
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    qp, spec = QL.quantize_linear_fraction(w, int4_fraction=0.5, impl="ref")
+    qp = {k_: (v.value if hasattr(v, "value") else v) for k_, v in qp.items()}
+    out = QL.qlinear_apply(spec, qp, x)
+    # manual: quantize acts per spec, dequantize everything, matmul
+    wd = np.asarray(Q.dequantize_weight_int4(
+        Q.QuantizedTensor(qp["w_packed"], qp["w_scale"], 0, 4, (k, n)), 128))
+    q4, s4 = Q.quantize_act_groupwise(x[:, :spec.k4], 128, bits=4)
+    q8, s8 = Q.quantize_act_groupwise(x[:, spec.k4:], 128, bits=8)
+    a4 = np.asarray(q4, np.float32).reshape(m, -1, 128) * \
+        np.asarray(s4)[:, :, None]
+    a8 = np.asarray(q8, np.float32).reshape(m, -1, 128) * \
+        np.asarray(s8)[:, :, None]
+    ad = np.concatenate([a4.reshape(m, -1), a8.reshape(m, -1)], axis=1)
+    expected = ad @ wd
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_qlinear_with_plan_permutation(rng):
+    k, n, m = 384, 64, 16
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    x[:, rng.choice(k, 9, replace=False)] *= 30
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    plan = fmpq.plan_fmpq(np.abs(x).max(0))
+    qp, spec = QL.quantize_linear(w, plan, impl="ref")
+    qp = {k_: (v.value if hasattr(v, "value") else v) for k_, v in qp.items()}
+    out = np.asarray(QL.qlinear_apply(spec, qp, jnp.asarray(x)))
+    exact = x @ np.asarray(w)
+    rel = np.abs(out - exact) / (np.abs(exact) + 1e-2)
+    assert np.median(rel) < 0.15

@@ -1,0 +1,69 @@
+"""Hypothesis property tests for the packing/quantization primitives."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer as Q
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 8).map(lambda i: i * 2), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_pack_unpack_sequential_roundtrip(rows2, cols, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(cols, rows2 * 2)).astype(np.int8)
+    packed = Q.pack_int4(jnp.asarray(q), axis=1)
+    out = Q.unpack_int4(packed, axis=1)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_pack_unpack_interleaved_roundtrip(nblocks, cols, seed):
+    rng = np.random.default_rng(seed)
+    k = nblocks * 128
+    q = rng.integers(-8, 8, size=(k, cols)).astype(np.int8)
+    packed = Q.pack_int4_interleaved(jnp.asarray(q), axis=0, block_size=128)
+    assert packed.shape == (k // 2, cols)
+    out = Q.unpack_int4_interleaved(packed, axis=0, block_size=128)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]))
+def test_symmetric_quant_error_bound(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(4, 128)) * 10 ** rng.uniform(-2, 2)).astype(
+        np.float32)
+    q, s = Q.quantize_act_groupwise(jnp.asarray(x), 128, bits=bits)
+    deq = np.asarray(q, np.float32) * np.repeat(np.asarray(s), 128, axis=1)
+    err = np.abs(deq - x)
+    # |err| ≤ scale/2 everywhere (absmax scaling never clips)
+    bound = np.repeat(np.asarray(s), 128, axis=1) * 0.5 * 1.0001 + 1e-7
+    assert (err <= bound).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_kv_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    kv = rng.normal(size=(2, 2, 16, 64)).astype(np.float32)
+    p, s, z = Q.quantize_kv_channelwise(jnp.asarray(kv))
+    deq = np.asarray(Q.dequantize_kv_channelwise(p, s, z))
+    err = np.abs(deq - kv)
+    bound = np.broadcast_to(np.asarray(s) * 0.5 * 1.0001 + 1e-7, kv.shape)
+    assert (err <= bound).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_biased_unpack_identity(seed):
+    """dot(a, w) == dot(a, unpack_biased(w)) − 8·Σa (the §4.3 fold)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=(4, 128)).astype(np.int32)
+    w = rng.integers(-8, 8, size=(128, 8)).astype(np.int8)
+    packed = Q.pack_int4_interleaved(jnp.asarray(w), axis=0, block_size=128)
+    lo = (np.asarray(packed) & 0x0F).astype(np.int32)
+    hi = (np.asarray(packed) >> 4).astype(np.int32)
+    w_biased = np.concatenate([lo, hi], axis=0)       # w + 8, zero-extended
+    d_biased = a @ w_biased
+    correction = 8 * a.sum(axis=1, keepdims=True)
+    np.testing.assert_array_equal(d_biased - correction, a @ w.astype(np.int32))

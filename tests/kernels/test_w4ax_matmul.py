@@ -1,0 +1,85 @@
+"""W4Ax GEMM kernels vs the pure-jnp oracle, swept over shapes/schedules."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizer as Q
+from repro.kernels import ops, ref
+from repro.kernels import w4ax_matmul as WK
+
+
+def make_operands(rng, m, k4, k8, n):
+    k = k4 + k8
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = (rng.normal(size=(k, n)) * 0.05).astype(np.float32)
+    parts_q, parts_s = [], []
+    if k4:
+        q4, s4 = Q.quantize_act_groupwise(jnp.asarray(x[:, :k4]), 128, bits=4)
+        a4 = Q.pack_int4_interleaved(q4, axis=1, block_size=128)
+    else:
+        a4 = jnp.zeros((m, 0), jnp.uint8)
+        s4 = jnp.zeros((m, 0), jnp.float32)
+    if k8:
+        a8, s8 = Q.quantize_act_groupwise(jnp.asarray(x[:, k4:]), 128, bits=8)
+    else:
+        a8 = jnp.zeros((m, 0), jnp.int8)
+        s8 = jnp.zeros((m, 0), jnp.float32)
+    wq = Q.quantize_weight_int4(jnp.asarray(w), group_size=128)
+    return x, w, a4, s4, a8, s8, wq
+
+
+SHAPES = [
+    (8, 128, 0, 64),      # pure W4A4, tiny N
+    (8, 0, 128, 64),      # pure W4A8
+    (16, 256, 128, 128),  # mixed
+    (64, 384, 128, 256),  # mixed, larger
+    (130, 128, 256, 192), # M not multiple of tile, N not of 128
+]
+
+
+@pytest.mark.parametrize("m,k4,k8,n", SHAPES)
+@pytest.mark.parametrize("schedule", ["split", "mixed"])
+def test_pallas_matches_oracle(rng, m, k4, k8, n, schedule):
+    x, w, a4, s4, a8, s8, wq = make_operands(rng, m, k4, k8, n)
+    nb4 = k4 // 128
+    oracle = ref.w4ax_matmul_ref(
+        a4, s4, a8, s8,
+        wq.data[: k4 // 2], wq.scale[:nb4],
+        wq.data[k4 // 2:], wq.scale[nb4:])
+    out = ops.w4ax_matmul(a4, s4, a8, s8, wq.data, wq.scale,
+                          schedule=schedule, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("conversion", ["zeroext", "signext"])
+def test_conversion_paths_agree(rng, conversion):
+    x, w, a4, s4, a8, s8, wq = make_operands(rng, 16, 256, 128, 128)
+    out = WK.w4ax_matmul_split(
+        a4, s4, a8, s8, wq.data, wq.scale,
+        conversion=conversion, interpret=True)
+    oracle = ref.w4ax_matmul_ref(
+        a4, s4, a8, s8, wq.data[:128], wq.scale[:2],
+        wq.data[128:], wq.scale[2:])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_quantized_gemm_approximates_float(rng):
+    x, w, a4, s4, a8, s8, wq = make_operands(rng, 64, 512, 0, 128)
+    out = np.asarray(ops.w4ax_matmul(a4, s4, a8, s8, wq.data, wq.scale,
+                                     impl="ref"))
+    exact = x @ w
+    rel = np.abs(out - exact) / (np.abs(exact) + 1e-2)
+    assert np.median(rel) < 0.25
+
+
+def test_3d_leading_dims(rng):
+    x, w, a4, s4, a8, s8, wq = make_operands(rng, 24, 128, 128, 64)
+    a4r = a4.reshape(2, 12, -1); s4r = s4.reshape(2, 12, -1)
+    a8r = a8.reshape(2, 12, -1); s8r = s8.reshape(2, 12, -1)
+    out3 = ops.w4ax_matmul(a4r, s4r, a8r, s8r, wq.data, wq.scale, impl="ref")
+    out2 = ops.w4ax_matmul(a4, s4, a8, s8, wq.data, wq.scale, impl="ref")
+    assert out3.shape == (2, 12, 64)
+    np.testing.assert_allclose(np.asarray(out3).reshape(24, 64),
+                               np.asarray(out2), rtol=1e-6)

@@ -1,0 +1,96 @@
+"""Sharding rules: every param/cache spec must be valid for the mesh."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.launch.specs import shapes_of_init
+from repro.parallel import sharding as SH
+
+
+def fake_mesh(shape, axes):
+    """Abstract mesh is enough to validate spec construction."""
+    n = int(np.prod(shape))
+    devs = jax.devices() * n
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS[:6])
+@pytest.mark.parametrize("rules_name", ["train", "serve"])
+def test_param_specs_divide_dims(arch, rules_name):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params, axes = shapes_of_init(lm)
+    mesh = fake_mesh((2, 2), ("data", "model"))
+    rules = SH.TRAIN_RULES if rules_name == "train" else SH.SERVE_RULES
+    specs = SH.tree_pspecs(axes, params, mesh, rules)
+
+    def check(p, s):
+        assert isinstance(s, P)
+        for dim, ax in zip(p.shape, tuple(s) + (None,) * p.ndim):
+            if ax is not None:
+                size = mesh.shape[ax] if isinstance(ax, str) else int(
+                    np.prod([mesh.shape[a] for a in ax]))
+                assert dim % size == 0, (p.shape, s)
+
+    jax.tree.map(check, params, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["qwen2_72b", "zamba2_2p7b", "rwkv6_1p6b"])
+def test_cache_specs_valid(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg, quant=QuantConfig(impl="ref"))
+    cache = jax.eval_shape(lambda: lm.init_cache(8, 64))
+    mesh = fake_mesh((2, 2), ("data", "model"))
+    specs = SH.cache_pspecs(cache, mesh)
+
+    def check(p, s):
+        for dim, ax in zip(p.shape, tuple(s) + (None,) * p.ndim):
+            if ax is not None:
+                size = mesh.shape[ax] if isinstance(ax, str) else int(
+                    np.prod([mesh.shape[a] for a in ax]))
+                assert dim % size == 0, (p.shape, s)
+
+    jax.tree.map(check, cache, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_spec_pod_axis():
+    mesh3 = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    assert SH.batch_spec(mesh3) == P(("pod", "data"))
+    mesh2 = fake_mesh((2, 2), ("data", "model"))
+    assert SH.batch_spec(mesh2) == P("data")
+
+
+def test_dryrun_smoke_subprocess():
+    """Lower+compile one smoke cell on 8 fake devices in a subprocess
+    (isolates the XLA device-count env from this process)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax
+from jax.sharding import Mesh
+import repro.configs.base as CB
+CB.get_config = CB.get_smoke_config
+CB.SHAPES = {"train_4k": CB.ShapeConfig("train_4k", 64, 8, "train"),
+             "decode_32k": CB.ShapeConfig("decode_32k", 128, 8, "decode")}
+import repro.launch.specs as SP
+SP.SHAPES = CB.SHAPES
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+for shape in ("train_4k", "decode_32k"):
+    cell = SP.build_cell("llama3_8b", shape, mesh)
+    with mesh:
+        c = jax.jit(cell.step_fn, in_shardings=cell.in_shardings).lower(
+            *cell.args).compile()
+    assert c.cost_analysis().get("flops", 0) >= 0
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert "OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,41 @@
+"""Prefill/decode must reproduce the full-sequence forward exactly (fp)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM
+
+ARCHS = ["qwen2_72b", "starcoder2_15b", "rwkv6_1p6b", "zamba2_2p7b",
+         "qwen3_moe_235b_a22b", "llama3p2_vision_90b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_train_forward(arch):
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        # capacity-dropping depends on the total token count, so exact
+        # train/prefill parity needs drop-free capacity
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = lm.init(key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S + 2), 0, cfg.vocab_size)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"image_embeds": jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model))}
+    full, _ = jax.jit(lambda p, t: lm.train_logits(p, t, extra))(
+        params, tokens)
+    cache = lm.init_cache(B, S + 8)
+    lg, cache = jax.jit(lambda p, t, c: lm.prefill(p, t, c, extra))(
+        params, tokens[:, :S], cache)
+    tol = 0.05 * float(jnp.abs(full).max())
+    assert float(jnp.abs(lg[:, 0] - full[:, S - 1]).max()) < tol
+    for i in range(2):
+        lg, cache = jax.jit(lm.decode)(
+            params, tokens[:, S + i:S + i + 1], cache)
+        assert float(jnp.abs(lg[:, 0] - full[:, S + i]).max()) < tol

@@ -1,0 +1,40 @@
+"""Paged KV4 pool: write_prompt/append/gather roundtrip vs direct quant."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+
+
+def test_write_gather_roundtrip(rng):
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=8, page_size=4, max_seqs=4,
+                            max_pages_per_seq=8), 2)
+    t = 10
+    k = jnp.asarray(rng.normal(size=(1, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    assert cache.allocate_seq(0, t)
+    cache.write_prompt(0, 0, k, v)
+    cache.write_prompt(1, 0, k * 0.5, v * 0.5)
+    kp, vp, lens = cache.gather_kv(0, [0], t)
+    assert int(lens[0]) == t
+    kp_direct, vp_direct = cache.quantize_kv(k, v)
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(kp_direct))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(vp_direct))
+    # append one token
+    assert cache.extend_seq(0)
+    k1 = jnp.asarray(rng.normal(size=(1, 1, cfg.num_kv_heads, cfg.head_dim)),
+                     jnp.float32)
+    cache.append_token(0, 0, k1, k1, pos=t)
+    cache.advance([0])
+    kp2, _, lens2 = cache.gather_kv(0, [0], t + 1)
+    assert int(lens2[0]) == t + 1
+    k1p, _ = cache.quantize_kv(k1, k1)
+    np.testing.assert_array_equal(np.asarray(kp2[0, :, t]),
+                                  np.asarray(k1p[0, :, 0]))
+    # earlier tokens untouched
+    np.testing.assert_array_equal(np.asarray(kp2[0, :, :t]),
+                                  np.asarray(kp_direct[0]))

@@ -1,0 +1,68 @@
+"""Scheduler + paged-cache allocator invariants."""
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+from repro.serving.scheduler import Request, Scheduler
+
+
+def make_cache(num_pages=16, page_size=8, max_seqs=8):
+    cfg = get_smoke_config("llama3_8b")
+    return PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=num_pages, page_size=page_size,
+                            max_seqs=max_seqs, max_pages_per_seq=8), 1)
+
+
+def test_alloc_free_conserves_pages():
+    cache = make_cache()
+    total = cache.pages_free
+    assert cache.allocate_seq(0, 20)      # 3 pages
+    assert cache.allocate_seq(1, 8)       # 1 page
+    assert cache.pages_free == total - 4
+    cache.free_seq(0)
+    cache.free_seq(1)
+    assert cache.pages_free == total
+    assert (cache.block_table == -1).all()
+
+
+def test_admission_respects_capacity():
+    cache = make_cache(num_pages=4, page_size=8)
+    sched = Scheduler(max_batch=8, max_seqs=8)
+    for i in range(5):
+        sched.submit(Request(i, list(range(8)), 4, arrived_at=i))
+    admitted = sched.admit(cache)
+    # each 8-token prompt = 1 page; admission requires prompt+1 headroom
+    # page free, so 3 fit on 4 pages (1+1, 2+1, 3+1≤4) and the 4th does not
+    assert len(admitted) == 3
+    assert len(sched.waiting) == 2
+    assert cache.pages_free == 1
+
+
+def test_preemption_requeues_with_progress():
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, [1, 2, 3], 10, arrived_at=0.0))
+    sched.submit(Request(1, [4, 5, 6], 10, arrived_at=1.0))
+    sched.admit(cache)
+    for r in sched.running:
+        r.generated = [7, 8]
+        r.prefilled = True
+    victim = sched.preempt_one(cache)
+    assert victim.request_id == 1          # youngest
+    assert victim.prompt == [4, 5, 6, 7, 8]  # keeps generated progress
+    assert victim.max_new_tokens == 8
+    assert sched.preemptions == 1
+
+
+def test_snapshot_restore_roundtrip():
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, [1, 2], 5, arrived_at=0.0))
+    sched.submit(Request(1, [3], 5, arrived_at=1.0))
+    sched.admit(cache)
+    sched.running[0].generated = [9]
+    blob = sched.snapshot()
+    s2 = Scheduler.restore(blob, 4, 8)
+    assert len(s2.waiting) == 2
+    first = s2.waiting[0]
+    assert first.prompt == [1, 2, 9] and first.max_new_tokens == 4

@@ -1,0 +1,60 @@
+"""Checkpoint atomicity, roundtrip, resume, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as CKPT
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = make_tree()
+    CKPT.save(str(tmp_path), 7, tree, extra={"note": "x"})
+    restored, extra, step = CKPT.restore(str(tmp_path), tree)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_ignores_incomplete(tmp_path):
+    tree = make_tree()
+    CKPT.save(str(tmp_path), 1, tree)
+    # simulate a crashed save: directory without _COMPLETE
+    bad = tmp_path / "step_00000002"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert CKPT.latest_step(str(tmp_path)) == 1
+
+
+def test_async_save_then_restore(tmp_path):
+    tree = make_tree(3)
+    CKPT.save_async(str(tmp_path), 5, tree)
+    CKPT.wait_async()
+    restored, _, step = CKPT.restore(str(tmp_path), tree)
+    assert step == 5
+
+
+def test_cleanup_keeps_last(tmp_path):
+    tree = make_tree()
+    for s in (1, 2, 3, 4):
+        CKPT.save(str(tmp_path), s, tree)
+    CKPT.cleanup(str(tmp_path), keep_last=2)
+    assert CKPT.latest_step(str(tmp_path)) == 4
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000003", "step_00000004"]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    CKPT.save(str(tmp_path), 1, make_tree())
+    bad_template = {"a": jnp.zeros((2, 2)),
+                    "nested": {"b": jnp.zeros(6, jnp.int32)}}
+    with pytest.raises(AssertionError):
+        CKPT.restore(str(tmp_path), bad_template)

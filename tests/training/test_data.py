@@ -1,0 +1,34 @@
+"""Data pipeline determinism + host sharding."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLMData
+
+
+def test_batches_deterministic():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4, seed=11)
+    a = SyntheticLMData(cfg).batch_for_step(9)
+    b = SyntheticLMData(cfg).batch_for_step(9)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_steps_differ():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4)
+    a = SyntheticLMData(cfg).batch_for_step(1)
+    b = SyntheticLMData(cfg).batch_for_step(2)
+    assert (np.asarray(a["tokens"]) != np.asarray(b["tokens"])).any()
+
+
+def test_hosts_get_disjoint_streams():
+    base = dict(vocab_size=512, seq_len=16, global_batch=8, num_hosts=2)
+    a = SyntheticLMData(DataConfig(**base, host_id=0)).batch_for_step(0)
+    b = SyntheticLMData(DataConfig(**base, host_id=1)).batch_for_step(0)
+    assert a["tokens"].shape[0] == 4
+    assert (np.asarray(a["tokens"]) != np.asarray(b["tokens"])).any()
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=2)
+    batch = SyntheticLMData(cfg).batch_for_step(0)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][:, 1:]),
+                                  np.asarray(batch["labels"][:, :-1]))
