@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 BLOCK_K = 128
 HALF = BLOCK_K // 2
 
@@ -70,7 +72,7 @@ def act_quant_int4(
             jax.ShapeDtypeStruct((m, k // 2), jnp.uint8),
             jax.ShapeDtypeStruct((m, k // BLOCK_K), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -100,7 +102,7 @@ def act_quant_int8(
             jax.ShapeDtypeStruct((m, k), jnp.int8),
             jax.ShapeDtypeStruct((m, k // BLOCK_K), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

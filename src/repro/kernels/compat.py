@@ -1,0 +1,22 @@
+"""JAX version-compatibility shims for the Pallas TPU kernels.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``). Every kernel in
+this package goes through :func:`tpu_compiler_params` so the rest of the
+code is pinned-version agnostic.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either JAX naming."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

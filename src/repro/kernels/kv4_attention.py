@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 __all__ = ["kv4_decode_attention"]
 
 NEG_INF = -1e30
@@ -163,7 +165,7 @@ def kv4_decode_attention(
             jax.ShapeDtypeStruct((b * hkv, g, d), jnp.float32),
             jax.ShapeDtypeStruct((b * hkv, g, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

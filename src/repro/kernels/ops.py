@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as R
 from repro.kernels import w4ax_matmul as WK
 from repro.kernels import kv4_attention as AK
+from repro.kernels import paged_attention as PK
 from repro.kernels import act_quant as QK
 
 BLOCK_K = WK.BLOCK_K
@@ -31,6 +32,7 @@ BLOCK_K = WK.BLOCK_K
 __all__ = [
     "w4ax_matmul",
     "kv4_decode_attention",
+    "paged_kv4_decode_attention",
     "act_quant",
     "default_impl",
 ]
@@ -149,6 +151,41 @@ def kv4_decode_attention(
     return AK.kv4_decode_attention(
         q, k_packed, k_scale, k_zero, v_packed, v_scale, v_zero, length,
         bt=bt, interpret=interp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged KV4 decode attention (gather-free serving hot path)
+# ---------------------------------------------------------------------------
+
+def paged_kv4_decode_attention(
+    q: jax.Array,             # [B, Hq, D]
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8
+    k_scale: jax.Array,       # [Hkv, 1, D] or [B, Hkv, 1, D]
+    k_zero: jax.Array,
+    v_pool: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    block_tables: jax.Array,  # [B, NP] int32
+    length: jax.Array,        # [B] int32
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Decode attention straight off the paged pools — no gather_kv.
+
+    The Pallas path resolves ``(seq, logical page) → physical page``
+    inside the kernel via scalar-prefetched block tables; the ref path
+    gathers pages in jnp (same semantics, used for CPU serving + tests).
+    """
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return R.paged_kv4_decode_attention_ref(
+            q, k_pool, k_scale, k_zero, v_pool, v_scale, v_zero,
+            block_tables, length,
+        )
+    return PK.paged_kv4_decode_attention(
+        q, k_pool, k_scale, k_zero, v_pool, v_scale, v_zero,
+        block_tables, length, interpret=interp,
     )
 
 

@@ -1,0 +1,175 @@
+"""Gather-free paged KV4 flash-decode attention (COMET §5 serving path).
+
+The block-table-aware successor to ``kv4_attention.kv4_decode_attention``:
+instead of materializing each sequence's packed KV contiguously before
+the kernel (a per-token O(context) copy), the kernel consumes the
+*physical page pools* directly. Block tables and per-sequence lengths
+ride in as scalar-prefetch operands, so each grid step's BlockSpec
+index_map resolves the logical page ``(seq, page_idx)`` to its physical
+pool slot before the DMA is issued — the vLLM/QServe dataflow on TPU.
+Decode cost becomes O(pages touched); pages past a sequence's length are
+skipped entirely (``pl.when``), so ragged batches pay only for real
+tokens, page-granular.
+
+Quantization algebra is identical to the contiguous kernel: channel-wise
+asymmetric int4 with the TPU-native zero-point fold — the hot loop
+touches only raw nibbles (mask + shift), all affine terms are O(D)
+pre/post work outside the kernel.
+
+Layout: pools are ``[num_pages, page_size, Hkv, D/2]`` uint8 — one page
+per grid step per (batch, kv-head) program; block tables are
+``[B, max_pages]`` int32 with unmapped entries clamped to 0 (masked by
+length in-kernel, never read semantically).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.kv4_attention import NEG_INF, _unpack_nibbles_f32
+
+__all__ = ["paged_kv4_decode_attention"]
+
+
+def _paged_kv4_decode_kernel(
+    tbl_ref,               # scalar prefetch: [B, NP] int32 physical page ids
+    len_ref,               # scalar prefetch: [B] int32 valid lengths
+    qt_ref,                # [1, G, D] f32  — q·s_k/√D (pre-scaled)
+    c_ref,                 # [1, G, 1] f32  — zero-point fold Σ q̃·z_k
+    kp_ref,                # [1, ps, 1, D/2] uint8 — one K page
+    vp_ref,                # [1, ps, 1, D/2] uint8 — one V page
+    o_ref,                 # [1, G, D] f32 — unnormalized Σ p̃·n_v
+    l_ref,                 # [1, G, 1] f32 — softmax denominator
+    acc_ref, m_ref, d_ref, # scratch: [G, D], [G, 1], [G, 1]
+    *,
+    ps: int,
+    npages: int,
+    hkv: int,
+):
+    bh = pl.program_id(0)
+    pi = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    length = len_ref[b]
+    chunk_start = pi * ps
+
+    @pl.when(chunk_start < length)
+    def _compute():
+        qt = qt_ref[0]                                 # [G, D]
+        c = c_ref[0]                                   # [G, 1]
+        nk = _unpack_nibbles_f32(kp_ref[0, :, 0, :])   # [ps, D]
+        s = jax.lax.dot_general(
+            qt, nk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) - c                                          # [G, ps]
+        pos = chunk_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                         # [G, ps]
+        nv = _unpack_nibbles_f32(vp_ref[0, :, 0, :])   # [ps, D]
+        pv = jax.lax.dot_general(
+            p, nv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # [G, D]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        d_ref[...] = d_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _done():
+        o_ref[0] = acc_ref[...]
+        l_ref[0] = d_ref[...]
+
+
+def paged_kv4_decode_attention(
+    q: jax.Array,             # [B, Hq, D] — decode-step queries
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] (or [B, Hkv, 1, D]) f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    block_tables: jax.Array,  # [B, NP] int32 physical page per logical page
+    length: jax.Array,        # [B] int32 — valid KV lengths (≤ NP·ps)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode straight off the paged pools. Returns [B, Hq, D] f32."""
+    b, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hkv
+    npages = block_tables.shape[1]
+    tables = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    def bcast(s):
+        return jnp.broadcast_to(s, (b, hkv, 1, d))
+
+    # --- affine pre-fold (outside the kernel, O(B·H·D)) ---
+    sm = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    qt = qg * bcast(k_scale) * sm                      # [B, Hkv, G, D]
+    c = jnp.sum(qt * bcast(k_zero), axis=-1, keepdims=True)
+
+    qt2 = qt.reshape(b * hkv, g, d)
+    c2 = c.reshape(b * hkv, g, 1)
+
+    kernel = functools.partial(
+        _paged_kv4_decode_kernel, ps=ps, npages=npages, hkv=hkv)
+
+    def page_map(bh, pi, tbl, lens):
+        return (tbl[bh // hkv, pi], 0, bh % hkv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, npages),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, pi, tbl, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda bh, pi, tbl, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d // 2), page_map),
+            pl.BlockSpec((1, ps, 1, d // 2), page_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, pi, tbl, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda bh, pi, tbl, lens: (bh, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    acc, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, g, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tables, length.astype(jnp.int32), qt2, c2, k_pool, v_pool)
+
+    # --- affine post-fold: out = s_v ⊙ (acc / l) − s_v ⊙ z_v ---
+    acc = acc.reshape(b, hkv, g, d)
+    l = l.reshape(b, hkv, g, 1)
+    sv = bcast(v_scale)
+    zv = bcast(v_zero)
+    out = sv * (acc / l) - sv * zv
+    return out.reshape(b, hq, d)

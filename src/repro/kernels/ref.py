@@ -21,6 +21,7 @@ __all__ = [
     "w4a8_matmul_ref",
     "w4ax_matmul_ref",
     "kv4_decode_attention_ref",
+    "paged_kv4_decode_attention_ref",
     "act_quant_ref",
 ]
 
@@ -154,6 +155,41 @@ def kv4_decode_attention_ref(
     out = jnp.einsum("bhgt,bhtd->bhgd", p.astype(compute_dtype), v_deq,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, hq, d)
+
+
+def paged_kv4_decode_attention_ref(
+    q: jax.Array,             # [B, Hq, D] — decode-step queries
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] (or [B, Hkv, 1, D]) f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    block_tables: jax.Array,  # [B, NP] int32 (-1/unmapped → clamped to 0)
+    length: jax.Array,        # [B] int32 valid lengths
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather pages in jnp, then run the
+    contiguous oracle. The gather is what the Pallas kernel's block-table
+    index_map eliminates; here it *defines* the expected semantics."""
+    b, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    npages = block_tables.shape[1]
+    tables = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    def gather(pool):
+        pages = pool[tables]                     # [B, NP, ps, Hkv, D/2]
+        flat = pages.reshape(b, npages * ps, hkv, d // 2)
+        return flat.swapaxes(1, 2)               # [B, Hkv, NP·ps, D/2]
+
+    def bcast(s):
+        return jnp.broadcast_to(s, (b, hkv, 1, d))
+
+    return kv4_decode_attention_ref(
+        q, gather(k_pool), bcast(k_scale), bcast(k_zero),
+        gather(v_pool), bcast(v_scale), bcast(v_zero), length,
+        compute_dtype=compute_dtype,
+    )
 
 
 def act_quant_ref(x: jax.Array, block_size: int = 128, bits: int = 4):

@@ -24,7 +24,7 @@ import jax
 
 from repro.configs.base import SHAPES, all_cells, applicable_shapes, get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import build_cell
+from repro.launch.specs import build_cell, cost_analysis_dict
 
 COLLECTIVE_OPS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -105,7 +105,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update({

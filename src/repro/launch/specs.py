@@ -21,9 +21,22 @@ from repro.parallel import sharding as SH
 from repro.training import optimizer as OPT
 from repro.training.train_loop import make_train_step
 
-__all__ = ["build_cell", "input_specs", "shapes_of_init"]
+__all__ = ["build_cell", "input_specs", "shapes_of_init",
+           "cost_analysis_dict"]
 
 SDS = jax.ShapeDtypeStruct
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older releases return a one-dict-per-device list; newer ones return
+    the dict directly. Always hand back a plain dict (empty if absent).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
 
 
 def shapes_of_init(lm: LM, quantized: bool = False):

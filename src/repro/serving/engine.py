@@ -4,16 +4,24 @@ The engine is the paper's §5 system layer: W4Ax projections + int4 paged
 KV + vLLM-style scheduling. Unlike the scanned `LM.decode` (used for the
 compile-time dry-run), the engine walks layers in a Python loop so each
 layer's attention reads/writes the *paged* pool directly — the realistic
-serving dataflow (gather pages → KV4 flash-decode → append one token).
+serving dataflow (append one token batched → block-table flash-decode).
+
+Decode is gather-free: each layer issues exactly ONE paged-attention
+kernel call for the whole decode batch, consuming the physical pools +
+device block tables (O(pages touched) per step). The legacy
+gather-then-attend path (`decode_attention="gather"`, a per-token
+O(context) copy per sequence) is kept solely as the Fig. 11 benchmark
+baseline.
 
 Supported families here: dense, moe (the paper's evaluation set —
 LLaMA/Qwen/Mistral class + MoE). Hybrid/ssm decode serve through
 ``LM.decode`` (their state is O(1) — paging buys nothing).
 
 Fault tolerance: ``snapshot()`` captures scheduler state; ``Engine.
-restore`` rebuilds mid-flight work after a crash (prompts re-prefill; the
-sampler is keyed by (request_id, position) so regenerated text is
-identical).
+restore`` rebuilds mid-flight work after a crash (prompts re-prefill).
+Sampling is keyed by (request_id, position), but regenerated text is not
+bit-identical in general: re-prefill attends in fp while decode attends
+over the int4 pages, so greedy argmax can flip on near-ties.
 """
 
 from __future__ import annotations
@@ -47,6 +55,13 @@ class EngineConfig:
     max_pages_per_seq: int = 64
     temperature: float = 0.0        # 0 → greedy
     top_k: int = 40
+    decode_attention: str = "paged"  # "paged" (gather-free) | "gather"
+
+    def __post_init__(self):
+        if self.decode_attention not in ("paged", "gather"):
+            raise ValueError(
+                f"decode_attention must be 'paged' or 'gather', got "
+                f"{self.decode_attention!r}")
 
 
 class Engine:
@@ -167,13 +182,40 @@ class Engine:
         req.prefilled = True
         self.tokens_generated += 1
 
+    def _attend_paged(self, li: int, q, block_tables, lengths):
+        """One kernel call for the whole decode batch — block tables in,
+        no per-sequence materialization."""
+        cache = self.cache
+        return ops.paged_kv4_decode_attention(
+            q[:, 0], cache.k_pool[li], cache.k_scale, cache.k_zero,
+            cache.v_pool[li], cache.v_scale, cache.v_zero,
+            block_tables, lengths, impl=self.quant.impl)
+
+    def _attend_gather(self, li: int, q, slots, max_len, lengths):
+        """[Benchmark baseline] per-token O(context) gather, then the
+        contiguous KV4 kernel."""
+        cache = self.cache
+        kp, vp, _ = cache.gather_kv(li, slots, max_len)
+        bsz = q.shape[0]
+        bcast = lambda s: jnp.broadcast_to(s[None], (bsz, *s.shape))
+        return ops.kv4_decode_attention(
+            q[:, 0], kp, bcast(cache.k_scale), bcast(cache.k_zero),
+            vp, bcast(cache.v_scale), bcast(cache.v_zero),
+            lengths, impl=self.quant.impl)
+
     def _decode_batch(self, reqs: list[Request]):
         cfg = self.cfg
         slots = [r.seq_slot for r in reqs]
+        bsz = len(reqs)
         last = jnp.asarray([[r.generated[-1]] for r in reqs], jnp.int32)
-        max_len = int(self.cache.seq_len[slots].max()) + 1
 
         lengths_np = self.cache.seq_len[slots].copy()
+        max_len = int(lengths_np.max()) + 1
+        paged = self.ecfg.decode_attention == "paged"
+        # block tables are fixed for the step (extend_seq already ran);
+        # lengths include the token being appended this step
+        block_tables = self.cache.block_tables_device(slots, max_len)
+        lengths = jnp.asarray(lengths_np + 1, jnp.int32)
         with self.lm._ctx():
             x = self.lm._embed(self.params, last)
             positions = jnp.asarray(lengths_np)[:, None]
@@ -182,21 +224,14 @@ class Engine:
                 h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
                 q, k, v = ATT._project_qkv(
                     bp["attn"], cfg, h, h, positions, positions)
-                # write the new token's KV into its page, then gather+attend
-                for bi, r in enumerate(reqs):
-                    self.cache.append_token(
-                        li, r.seq_slot, k[bi:bi+1], v[bi:bi+1],
-                        pos=lengths_np[bi])
-                kp, vp, _ = self.cache.gather_kv(li, slots, max_len)
-                bsz = len(reqs)
-                bcast = lambda s: jnp.broadcast_to(
-                    s[None], (bsz, *s.shape))
-                out = ops.kv4_decode_attention(
-                    q[:, 0], kp, bcast(self.cache.k_scale),
-                    bcast(self.cache.k_zero), vp,
-                    bcast(self.cache.v_scale), bcast(self.cache.v_zero),
-                    jnp.asarray(lengths_np) + 1,
-                    impl=self.quant.impl)
+                # write the batch's new KV (one scatter), then attend over
+                # the pools via block tables — one kernel call per layer
+                self.cache.append_tokens(li, slots, k, v,
+                                         positions=lengths_np)
+                if paged:
+                    out = self._attend_paged(li, q, block_tables, lengths)
+                else:
+                    out = self._attend_gather(li, q, slots, max_len, lengths)
                 out = out.reshape(bsz, 1, cfg.q_dim).astype(x.dtype)
                 x = x + C.linear(bp["attn"]["wo"], out)
                 h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)

@@ -7,10 +7,13 @@ Sequences own pages through a block table ``[max_seqs, max_pages]`` int32
 frees whole pages. Per-channel scales/zeros are static (calibrated), so
 pages never need rescaling — the property that makes int4 paging cheap.
 
-The gather path (`gather_kv`) materializes a sequence's packed KV
-contiguously for the decode-attention kernel; on TPU this is the paged
-indirection the paper inherits from vLLM [15], kept outside the kernel so
-the same Pallas kernel serves paged and contiguous caches.
+The decode hot path is gather-free: `block_tables_device`/
+`lengths_device` hand the physical indirection straight to the
+block-table-aware paged attention kernel, which resolves
+``(seq, logical page) → physical page`` in its index maps — decode is
+O(pages touched). The legacy gather path (`gather_kv`) that materializes
+a sequence's packed KV contiguously (a per-token O(context) copy) is
+retained only as the benchmark baseline and for tests.
 """
 
 from __future__ import annotations
@@ -155,12 +158,47 @@ class PagedKV4Cache:
         self.v_pool = self.v_pool.at[layer_slot, page, off].set(
             vp[0, :, 0, :])
 
+    def append_tokens(self, layer_slot: int, seq_ids, k, v, positions=None):
+        """Batched one-token append: k/v ``[B, 1, Hkv, D]`` float, one
+        scatter into the pools for the whole decode batch (vs one host
+        round-trip per sequence with :meth:`append_token`). Positions
+        default to each sequence's current length; does NOT advance."""
+        kp, vp = self.quantize_kv(k, v)                # [B, Hkv, 1, D/2]
+        seq_ids = np.atleast_1d(np.asarray(seq_ids))
+        pos = (self.seq_len[seq_ids] if positions is None
+               else np.atleast_1d(np.asarray(positions)))
+        ps = self.pcfg.page_size
+        pages_np = self.block_table[seq_ids, pos // ps]
+        if (pages_np < 0).any():
+            raise IndexError(
+                f"append_tokens into unmapped page(s) for seqs "
+                f"{seq_ids[pages_np < 0].tolist()} — call extend_seq first")
+        pages = jnp.asarray(pages_np)
+        offs = jnp.asarray(pos % ps)
+        self.k_pool = self.k_pool.at[layer_slot, pages, offs].set(
+            kp[:, :, 0, :])
+        self.v_pool = self.v_pool.at[layer_slot, pages, offs].set(
+            vp[:, :, 0, :])
+
     def advance(self, seq_ids):
         for s in np.atleast_1d(seq_ids):
             self.seq_len[s] += 1
 
+    # -------------------------------------------------- block-table views
+
+    def block_tables_device(self, seq_ids, max_len: int) -> jax.Array:
+        """[B, NP] int32 physical-page table for the paged-attention
+        kernel, sliced to the pages covering ``max_len`` and with
+        unmapped slots (-1) clamped to 0 (masked by length in-kernel)."""
+        npages = self.pages_needed(max_len)
+        tables = self.block_table[np.asarray(seq_ids), :npages]
+        return jnp.asarray(np.maximum(tables, 0), jnp.int32)
+
+    def lengths_device(self, seq_ids) -> jax.Array:
+        return jnp.asarray(self.seq_len[np.asarray(seq_ids)], jnp.int32)
+
     def gather_kv(self, layer_slot: int, seq_ids, max_len: int):
-        """Materialize packed KV for a decode batch.
+        """[Benchmark baseline] Materialize packed KV for a decode batch.
 
         → (k_packed, v_packed) [B, Hkv, max_len, D/2] plus lengths [B].
         Unmapped pages read page 0 but are masked by length in attention.

@@ -1,0 +1,83 @@
+"""Fixed-seed stand-in for `hypothesis` so tier-1 runs hermetically.
+
+Implements the small strategy surface the suite uses (``integers``,
+``sampled_from``, ``floats``, ``.map``) plus ``given``/``settings``. Each
+``@given`` test runs ``max_examples`` times over samples drawn from a
+fixed-seed generator — deterministic, no shrinking, no database, no
+network. When the real `hypothesis` is installed the test modules import
+it instead and this file is inert.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+st = strategies
+
+
+class settings:
+    """Profile registry mirroring hypothesis.settings' classmethod API."""
+
+    _profiles: dict = {}
+    _max_examples: int = 20
+
+    def __init__(self, **kwargs):
+        self.max_examples = kwargs.get("max_examples",
+                                       type(self)._max_examples)
+
+    @classmethod
+    def register_profile(cls, name, max_examples=20, **kwargs):
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._max_examples = cls._profiles.get(name, cls._max_examples)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorator(fn):
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(_SEED)
+            for _ in range(settings._max_examples):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                kdrawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **kdrawn)
+        # Deliberately no functools.wraps: pytest must see the wrapper's
+        # empty signature, not the strategy params (they aren't fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return decorator

@@ -1,6 +1,12 @@
+import os
+import sys
 import warnings
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# Make tests/ importable from test modules in subdirectories so the
+# hermetic `_hypothesis_stub` fallback resolves regardless of rootdir.
+sys.path.insert(0, os.path.dirname(__file__))
 
 import numpy as np
 import pytest

@@ -1,7 +1,10 @@
 """FMPQ algorithm invariants (hypothesis) + GEMM equivalence."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # hermetic env — fixed-seed sampled fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import fmpq
 from repro.core import quantizer as Q

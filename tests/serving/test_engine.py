@@ -83,6 +83,45 @@ def test_engine_crash_restore_completes(setup):
         assert pre_crash + len(r.generated) == 4
 
 
+def test_engine_snapshot_restore_mid_decode(setup):
+    """Snapshot taken mid-decode (multi-page block tables live) restores
+    to an engine that completes every request — block-table state is
+    rebuilt through re-prefill, not resurrected. (Exact text equality is
+    NOT asserted: re-prefill attends in fp while decode attends over the
+    int4 pages, so greedy argmax may flip on near-ties.)"""
+    cfg, qc, qparams = setup
+    ecfg = EngineConfig(max_batch=3, num_pages=64, page_size=4)
+    prompts = [[1, 2, 3, 4, 5], [6, 7], [8, 9, 10]]
+
+    eng = Engine(cfg, qparams, qc, ecfg)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 7)
+    for _ in range(4):       # prefill + several decode steps → pages span
+        eng.step()           # multiple blocks per sequence
+    slots = [r.seq_slot for r in eng.sched.running]
+    assert slots, "expected in-flight sequences mid-decode"
+    # live block-table state: every running seq owns ≥ 2 pages by now
+    for s in slots:
+        assert (eng.cache.block_table[s] >= 0).sum() >= 2
+    pre = {r.request_id: len(r.generated) for r in eng.sched.running}
+    blob = eng.snapshot()
+    del eng                  # crash
+
+    eng2 = Engine.restore(blob, cfg, qparams, qc, ecfg)
+    # restored cache starts empty — pages come back through re-prefill
+    assert eng2.cache.pages_free == ecfg.num_pages
+    assert (eng2.cache.block_table == -1).all()
+    done = eng2.run()
+    assert sorted(r.request_id for r in done) == [0, 1, 2]
+    for r in done:
+        pre_crash = len(r.prompt) - len(prompts[r.request_id])
+        assert pre_crash == pre.get(r.request_id, 0)
+        assert pre_crash + len(r.generated) == 7
+    # allocator invariants hold after the restored run drains
+    assert eng2.cache.pages_free == ecfg.num_pages
+    assert not eng2.cache.active
+
+
 def test_engine_preemption_under_pressure(setup):
     cfg, qc, qparams = setup
     # tiny pool forces preemption while decoding long generations
