@@ -20,10 +20,23 @@ Two parts:
     `"paged"` (block-table-aware kernel reads the pools directly,
     O(pages touched)). Reported as tok/s and per-step decode-path bytes,
     so the gather-free win is measured rather than asserted.
+
+(d) **Chunked vs whole-prompt prefill**: short requests decode while a
+    long prompt streams in. Whole-prompt prefill runs one O(T²) fp
+    forward per admitted request (decode stalls behind it — the max
+    step-time spike); chunked prefill packs `prefill_chunk_tokens` from
+    all partially-prefilled requests into one ragged forward per step,
+    bounding the fp activation footprint and interleaving with decode.
+    Reported: aggregate tok/s, time-to-first-token (mean/max), peak fp
+    prefill tokens, max step time, and interleaved-step count.
+
+``--smoke`` runs only part (d) — the CI end-to-end exercise of the
+prefill/decode interleave path.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -161,8 +174,83 @@ def measured_gather_vs_paged(verbose=True):
     return results
 
 
-def main():
+def measured_prefill_modes(verbose=True):
+    """Chunked vs whole-prompt prefill on a mixed workload: 4 ragged
+    short requests decode while a 96-token prompt streams in. Chunked
+    must be no slower in aggregate tok/s, bound its fp footprint by the
+    chunk budget, and keep decode steps flowing during the long prefill.
+
+    Short prompts are deliberately ragged (realistic traffic): the
+    whole-prompt baseline pays one fp forward PER request (each a fresh
+    trace), while chunked packs all of them plus the long prompt's first
+    slice into ONE ragged forward — the batched-prefill amortization."""
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(int4_fraction=0.875, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    short_lens, long_len, out_len = (5, 8, 11, 14), 96, 12
+    results = {}
+    for mode in ("whole", "chunked"):
+        eng = Engine(cfg, qparams, qc, EngineConfig(
+            max_batch=6, num_pages=128, page_size=8, max_pages_per_seq=32,
+            prefill_mode=mode, prefill_chunk_tokens=48))
+        for i, n in enumerate(short_lens):
+            eng.add_request(i, list(range(1, n + 1)), out_len)
+        eng.add_request(4, list(range(1, long_len + 1)), out_len)
+        step_times = []
+        t0 = time.time()
+        while eng.sched.has_work and eng.steps < 400:
+            s0 = time.time()
+            eng.step()
+            step_times.append(time.time() - s0)
+        dt = time.time() - t0
+        ttfts = [r.first_token_at - r.arrived_at
+                 for r in eng.sched.finished if r.first_token_at]
+        results[mode] = {
+            "tok_s": eng.tokens_generated / dt,
+            "ttft_mean_ms": 1e3 * float(np.mean(ttfts)),
+            "ttft_max_ms": 1e3 * float(np.max(ttfts)),
+            "peak_fp_tokens": eng.peak_prefill_fp_tokens,
+            "max_step_ms": 1e3 * max(step_times),
+            "interleaved_steps": eng.interleaved_steps,
+        }
+        if verbose:
+            r = results[mode]
+            print(f"prefill {mode:7s}: {r['tok_s']:7.1f} tok/s  "
+                  f"ttft mean/max {r['ttft_mean_ms']:6.0f}/"
+                  f"{r['ttft_max_ms']:6.0f} ms  "
+                  f"peak fp prefill {r['peak_fp_tokens']:3d} tok  "
+                  f"max step {r['max_step_ms']:6.0f} ms  "
+                  f"interleaved {r['interleaved_steps']}")
+    if verbose:
+        w, c = results["whole"], results["chunked"]
+        print(f"chunked/whole: tok/s {c['tok_s']/max(w['tok_s'],1e-9):.2f}×, "
+              f"peak fp {c['peak_fp_tokens']}/{w['peak_fp_tokens']} tok, "
+              f"decode interleaved during long prefill: "
+              f"{c['interleaved_steps']} vs {w['interleaved_steps']} steps")
+    return results
+
+
+def main(smoke: bool = False):
     t0 = time.time()
+    if smoke:
+        print("== fig11 --smoke: chunked vs whole-prompt prefill "
+              "(tiny model, CPU) ==")
+        prefill = measured_prefill_modes()
+        dt = time.time() - t0
+        c, w = prefill["chunked"], prefill["whole"]
+        assert c["peak_fp_tokens"] < w["peak_fp_tokens"], (
+            "chunked prefill must bound the fp activation footprint")
+        assert c["interleaved_steps"] > w["interleaved_steps"], (
+            "decode must interleave with chunked long-prompt prefill")
+        print(f"fig11_e2e_throughput,{dt*1e6:.0f},"
+              f"smoke_chunked_vs_whole_tok_s="
+              f"{c['tok_s']/max(w['tok_s'],1e-9):.2f}x;"
+              f"ttft_chunked={c['ttft_mean_ms']:.0f}ms;"
+              f"ttft_whole={w['ttft_mean_ms']:.0f}ms;"
+              f"peak_fp={c['peak_fp_tokens']}vs{w['peak_fp_tokens']}tok")
+        return
     print("\n== Fig. 11 proxy: derived e2e throughput vs W4A16 "
           "(80 GB budget) ==")
     print("--- in/out 1024/512 ---")
@@ -173,6 +261,9 @@ def main():
     meas = measured_engine()
     print("\n== measured decode path: gather vs paged (tiny model) ==")
     paths = measured_gather_vs_paged()
+    print("\n== measured prefill path: chunked vs whole-prompt "
+          "(tiny model) ==")
+    prefill = measured_prefill_modes()
     dt = time.time() - t0
     mean_long = float(np.mean([r["W4AxKV4"] for r in rel_long.values()]))
     mean_short = float(np.mean([r["W4AxKV4"] for r in rel_short.values()]))
@@ -183,8 +274,13 @@ def main():
           f"engine_kv4_vs_kv16="
           f"{meas['KV4-budget']['tok_s']/max(meas['KV16-budget']['tok_s'],1e-9):.2f}x;"
           f"paged_vs_gather="
-          f"{paths['paged']['tok_s']/max(paths['gather']['tok_s'],1e-9):.2f}x")
+          f"{paths['paged']['tok_s']/max(paths['gather']['tok_s'],1e-9):.2f}x;"
+          f"chunked_vs_whole_prefill="
+          f"{prefill['chunked']['tok_s']/max(prefill['whole']['tok_s'],1e-9):.2f}x")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: only the chunked-vs-whole prefill engine run")
+    main(smoke=ap.parse_args().smoke)

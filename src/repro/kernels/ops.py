@@ -33,6 +33,7 @@ __all__ = [
     "w4ax_matmul",
     "kv4_decode_attention",
     "paged_kv4_decode_attention",
+    "paged_kv4_prefill_attention",
     "act_quant",
     "default_impl",
 ]
@@ -186,6 +187,43 @@ def paged_kv4_decode_attention(
     return PK.paged_kv4_decode_attention(
         q, k_pool, k_scale, k_zero, v_pool, v_scale, v_zero,
         block_tables, length, interpret=interp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged KV4 chunked prefill attention (ragged prompt hot path)
+# ---------------------------------------------------------------------------
+
+def paged_kv4_prefill_attention(
+    q: jax.Array,             # [B, C, Hq, D] — one prefill chunk's queries
+    k_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk keys
+    v_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk values
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8
+    k_scale: jax.Array,       # [Hkv, 1, D]
+    k_zero: jax.Array,
+    v_pool: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    block_tables: jax.Array,  # [B, NP] int32
+    ctx_lens: jax.Array,      # [B] int32 — tokens already paged
+    q_lens: jax.Array,        # [B] int32 — valid chunk tokens (≤ C)
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Chunked prefill attention: fp chunk queries over int4 paged history
+    plus the causal in-flight fp chunk — the prompt path never holds more
+    than one chunk of fp KV. Returns [B, C, Hq, D] f32 (rows past
+    ``q_lens`` are padding garbage; mask outside)."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return R.paged_kv4_prefill_attention_ref(
+            q, k_new, v_new, k_pool, k_scale, k_zero,
+            v_pool, v_scale, v_zero, block_tables, ctx_lens, q_lens,
+        )
+    return PK.paged_kv4_prefill_attention(
+        q, k_new, v_new, k_pool, k_scale, k_zero,
+        v_pool, v_scale, v_zero, block_tables, ctx_lens, q_lens,
+        interpret=interp,
     )
 
 

@@ -1,4 +1,5 @@
-"""Gather-free paged KV4 flash-decode attention (COMET §5 serving path).
+"""Gather-free paged KV4 attention (COMET §5 serving path): flash-decode
+plus chunked ragged prefill, both straight off the physical page pools.
 
 The block-table-aware successor to ``kv4_attention.kv4_decode_attention``:
 instead of materializing each sequence's packed KV contiguously before
@@ -11,10 +12,21 @@ Decode cost becomes O(pages touched); pages past a sequence's length are
 skipped entirely (``pl.when``), so ragged batches pay only for real
 tokens, page-granular.
 
+``paged_kv4_prefill_attention`` extends the same dataflow to the prompt
+path: a chunk of fp queries (one per sequence in a ragged batch) attends
+causally over the sequence's already-written int4 pages *plus* the
+in-flight fp chunk, so a prompt's KV is quantized and paged
+incrementally — the engine never holds more than one chunk of fp KV.
+The grid walks history pages exactly like decode (pages past
+``ctx_lens`` are skipped) and finishes with one extra step over the fp
+chunk with an intra-chunk causal mask.
+
 Quantization algebra is identical to the contiguous kernel: channel-wise
 asymmetric int4 with the TPU-native zero-point fold — the hot loop
-touches only raw nibbles (mask + shift), all affine terms are O(D)
-pre/post work outside the kernel.
+touches only raw nibbles (mask + shift). For decode all affine terms are
+O(D) pre/post work outside the kernel; prefill mixes int4 history with
+fp chunk values, so the V affine is applied per history page in-kernel
+(``p@n_v ⊙ s_v − (Σp)·s_v⊙z_v`` — the matmul still runs on raw nibbles).
 
 Layout: pools are ``[num_pages, page_size, Hkv, D/2]`` uint8 — one page
 per grid step per (batch, kv-head) program; block tables are
@@ -34,7 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import tpu_compiler_params
 from repro.kernels.kv4_attention import NEG_INF, _unpack_nibbles_f32
 
-__all__ = ["paged_kv4_decode_attention"]
+__all__ = ["paged_kv4_decode_attention", "paged_kv4_prefill_attention"]
 
 
 def _paged_kv4_decode_kernel(
@@ -173,3 +185,200 @@ def paged_kv4_decode_attention(
     zv = bcast(v_zero)
     out = sv * (acc / l) - sv * zv
     return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked ragged prefill
+# ---------------------------------------------------------------------------
+
+def _paged_kv4_prefill_kernel(
+    tbl_ref,               # scalar prefetch: [B, NP] int32 physical page ids
+    ctx_ref,               # scalar prefetch: [B] int32 paged-history lengths
+    qlen_ref,              # scalar prefetch: [B] int32 valid chunk tokens
+    qt_ref,                # [1, CG, D] f32 — q·s_k/√D (history pre-fold)
+    c_ref,                 # [1, CG, 1] f32 — zero-point fold Σ q̃·z_k
+    qs_ref,                # [1, CG, D] f32 — q/√D (raw, for the fp chunk)
+    kn_ref,                # [1, C, D] f32 — in-flight fp chunk keys
+    vn_ref,                # [1, C, D] f32 — in-flight fp chunk values
+    vs_ref,                # [1, 1, D] f32 — v_scale (history V dequant)
+    vz_ref,                # [1, 1, D] f32 — v_zero
+    kp_ref,                # [1, ps, 1, D/2] uint8 — one K history page
+    vp_ref,                # [1, ps, 1, D/2] uint8 — one V history page
+    o_ref,                 # [1, CG, D] f32 — unnormalized output
+    l_ref,                 # [1, CG, 1] f32 — softmax denominator
+    acc_ref, m_ref, d_ref, # scratch: [CG, D], [CG, 1], [CG, 1]
+    *,
+    ps: int,
+    npages: int,
+    hkv: int,
+    g: int,
+):
+    bh = pl.program_id(0)
+    pi = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    ctx = ctx_ref[b]
+    qlen = qlen_ref[b]
+
+    def online_update(s, pv_fn):
+        """Shared online-softmax step; pv_fn(p) → [CG, D] value partial."""
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        pv = pv_fn(p)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        d_ref[...] = d_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    # --- int4 history pages: all chunk queries see all valid history ---
+    @pl.when((pi < npages) & (pi * ps < ctx))
+    def _history():
+        qt = qt_ref[0]                                 # [CG, D]
+        cc = c_ref[0]                                  # [CG, 1]
+        nk = _unpack_nibbles_f32(kp_ref[0, :, 0, :])   # [ps, D]
+        s = jax.lax.dot_general(
+            qt, nk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) - cc                                         # [CG, ps]
+        pos = pi * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+
+        def vals(p):
+            nv = _unpack_nibbles_f32(vp_ref[0, :, 0, :])
+            pv = jax.lax.dot_general(
+                p, nv, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                          # [CG, D]
+            sv = vs_ref[0, 0]                          # [D]
+            zv = vz_ref[0, 0]
+            return pv * sv - jnp.sum(p, axis=1, keepdims=True) * (sv * zv)
+
+        online_update(s, vals)
+
+    # --- in-flight fp chunk: intra-chunk causal mask, then write out ---
+    @pl.when(pi == npages)
+    def _chunk():
+        qs = qs_ref[0]                                 # [CG, D]
+        kn = kn_ref[0]                                 # [C, D]
+        s = jax.lax.dot_general(
+            qs, kn, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # [CG, C]
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        kj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((kj <= qi) & (kj < qlen), s, NEG_INF)
+        online_update(s, lambda p: jax.lax.dot_general(
+            p, vn_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+        o_ref[0] = acc_ref[...]
+        l_ref[0] = d_ref[...]
+
+
+def paged_kv4_prefill_attention(
+    q: jax.Array,             # [B, C, Hq, D] — one prefill chunk's queries
+    k_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk keys
+    v_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk values
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    block_tables: jax.Array,  # [B, NP] int32 physical page per logical page
+    ctx_lens: jax.Array,      # [B] int32 — tokens already paged (history)
+    q_lens: jax.Array,        # [B] int32 — valid chunk tokens (≤ C)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked prefill flash attention off the paged pools.
+
+    Query i of sequence b (absolute position ``ctx_lens[b] + i``) attends
+    over the int4 history pages [0, ctx_lens[b]) and the causal prefix of
+    the fp chunk. Rows i ≥ q_lens[b] are padding (finite garbage — mask
+    outside). Returns [B, C, Hq, D] f32.
+    """
+    b, c, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hkv
+    npages = block_tables.shape[1]
+    tables = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    if npages == 0:                    # pure-chunk call (no history yet)
+        tables = jnp.zeros((b, 1), jnp.int32)
+
+    # --- affine pre-fold for the history pages (outside the kernel) ---
+    sm = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = jnp.moveaxis(q.reshape(b, c, hkv, g, d).astype(jnp.float32), 1, 2)
+    ksb = jnp.broadcast_to(k_scale, (hkv, 1, d)).reshape(1, hkv, 1, 1, d)
+    kzb = jnp.broadcast_to(k_zero, (hkv, 1, d)).reshape(1, hkv, 1, 1, d)
+    qt = qg * ksb * sm                                 # [B, Hkv, C, G, D]
+    cterm = jnp.sum(qt * kzb, axis=-1, keepdims=True)
+    qt2 = qt.reshape(b * hkv, c * g, d)
+    c2 = cterm.reshape(b * hkv, c * g, 1)
+    qs2 = (qg * sm).reshape(b * hkv, c * g, d)
+    kn2 = k_new.astype(jnp.float32).swapaxes(1, 2).reshape(b * hkv, c, d)
+    vn2 = v_new.astype(jnp.float32).swapaxes(1, 2).reshape(b * hkv, c, d)
+    vs2 = jnp.broadcast_to(v_scale, (hkv, 1, d))
+    vz2 = jnp.broadcast_to(v_zero, (hkv, 1, d))
+
+    kernel = functools.partial(
+        _paged_kv4_prefill_kernel, ps=ps, npages=npages, hkv=hkv, g=g)
+
+    def page_map(bh, pi, tbl, ctx, qlen):
+        return (tbl[bh // hkv, jnp.maximum(jnp.minimum(pi, npages - 1), 0)],
+                0, bh % hkv, 0)
+
+    def row_map(bh, pi, tbl, ctx, qlen):
+        return (bh, 0, 0)
+
+    def head_map(bh, pi, tbl, ctx, qlen):
+        return (bh % hkv, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * hkv, npages + 1),
+        in_specs=[
+            pl.BlockSpec((1, c * g, d), row_map),       # qt
+            pl.BlockSpec((1, c * g, 1), row_map),       # c
+            pl.BlockSpec((1, c * g, d), row_map),       # qs
+            pl.BlockSpec((1, c, d), row_map),           # k_new
+            pl.BlockSpec((1, c, d), row_map),           # v_new
+            pl.BlockSpec((1, 1, d), head_map),          # v_scale
+            pl.BlockSpec((1, 1, d), head_map),          # v_zero
+            pl.BlockSpec((1, ps, 1, d // 2), page_map), # K page
+            pl.BlockSpec((1, ps, 1, d // 2), page_map), # V page
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c * g, d), row_map),
+            pl.BlockSpec((1, c * g, 1), row_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c * g, d), jnp.float32),
+            pltpu.VMEM((c * g, 1), jnp.float32),
+            pltpu.VMEM((c * g, 1), jnp.float32),
+        ],
+    )
+    acc, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, c * g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, c * g, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tables, ctx_lens.astype(jnp.int32), q_lens.astype(jnp.int32),
+      qt2, c2, qs2, kn2, vn2, vs2, vz2, k_pool, v_pool)
+
+    # V affine for history already applied in-kernel; just normalize.
+    out = (acc / l).reshape(b, hkv, c, g, d)
+    out = jnp.moveaxis(out, 2, 1)                      # [B, C, Hkv, G, D]
+    return out.reshape(b, c, hq, d)

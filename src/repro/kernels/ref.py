@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantizer as Q
+from repro.kernels.kv4_attention import NEG_INF
 
 __all__ = [
     "w4a4_matmul_ref",
@@ -22,6 +23,7 @@ __all__ = [
     "w4ax_matmul_ref",
     "kv4_decode_attention_ref",
     "paged_kv4_decode_attention_ref",
+    "paged_kv4_prefill_attention_ref",
     "act_quant_ref",
 ]
 
@@ -190,6 +192,74 @@ def paged_kv4_decode_attention_ref(
         gather(v_pool), bcast(v_scale), bcast(v_zero), length,
         compute_dtype=compute_dtype,
     )
+
+
+def paged_kv4_prefill_attention_ref(
+    q: jax.Array,             # [B, C, Hq, D] — one prefill chunk's queries
+    k_new: jax.Array,         # [B, C, Hkv, D] fp — the chunk's in-flight keys
+    v_new: jax.Array,         # [B, C, Hkv, D] fp — the chunk's in-flight values
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    block_tables: jax.Array,  # [B, NP] int32 (-1/unmapped → clamped to 0)
+    ctx_lens: jax.Array,      # [B] int32 — tokens already paged (history)
+    q_lens: jax.Array,        # [B] int32 — valid chunk tokens (≤ C)
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the chunked-prefill kernel.
+
+    Query i of sequence b sits at absolute position ``ctx_lens[b] + i``
+    and attends over (a) the int4 paged history [0, ctx_lens[b]) gathered
+    and dequantized here, and (b) the causal fp prefix of the in-flight
+    chunk ``k_new[b, :i+1]``. Rows i ≥ q_lens[b] are padding: they get
+    finite garbage (never NaN) and must be masked by the caller.
+    Returns [B, C, Hq, D] f32.
+    """
+    b, c, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hkv
+    npages = block_tables.shape[1]
+    t_hist = npages * ps
+    tables = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    def bcast(s):
+        return jnp.broadcast_to(s, (b, hkv, 1, d))
+
+    def gather_deq(pool, scale, zero):
+        pages = pool[tables]                     # [B, NP, ps, Hkv, D/2]
+        flat = pages.reshape(b, t_hist, hkv, d // 2).swapaxes(1, 2)
+        return Q.dequantize_kv_channelwise(
+            flat, bcast(scale), bcast(zero)).astype(compute_dtype)
+
+    kh = gather_deq(k_pool, k_scale, k_zero)     # [B, Hkv, Th, D]
+    vh = gather_deq(v_pool, v_scale, v_zero)
+    kn = k_new.swapaxes(1, 2).astype(compute_dtype)   # [B, Hkv, C, D]
+    vn = v_new.swapaxes(1, 2).astype(compute_dtype)
+    keys = jnp.concatenate([kh, kn], axis=2)     # [B, Hkv, Th+C, D]
+    vals = jnp.concatenate([vh, vn], axis=2)
+
+    qg = q.reshape(b, c, hkv, g, d).astype(compute_dtype)
+    scores = jnp.einsum("bchgd,bhtd->bhgct", qg, keys,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(d))                          # [B, Hkv, G, C, Th+C]
+
+    tpos = jnp.arange(t_hist + c)
+    hist_valid = tpos[None, :] < ctx_lens[:, None]          # [B, T]
+    j = tpos - t_hist                                        # chunk-local key
+    i = jnp.arange(c)
+    chunk_valid = ((j[None, None, :] <= i[None, :, None])
+                   & (j[None, None, :] < q_lens[:, None, None]))  # [B, C, T]
+    valid = jnp.where((tpos < t_hist)[None, None, :],
+                      hist_valid[:, None, :], chunk_valid)   # [B, C, T]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgct,bhtd->bhgcd", p.astype(compute_dtype), vals,
+                     preferred_element_type=jnp.float32)
+    out = jnp.moveaxis(out, 3, 1)                # [B, C, Hkv, G, D]
+    return out.reshape(b, c, hq, d)
 
 
 def act_quant_ref(x: jax.Array, block_size: int = 128, bits: int = 4):

@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--schedule", default="split", choices=["split", "mixed"])
     ap.add_argument("--impl", default="ref", choices=["auto", "pallas", "ref"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "whole"])
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="ragged-prefill token budget per step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,7 +54,9 @@ def main():
 
     eng = Engine(cfg, qparams, quant, EngineConfig(
         max_batch=args.max_batch, num_pages=args.pages,
-        page_size=args.page_size, temperature=args.temperature))
+        page_size=args.page_size, temperature=args.temperature,
+        prefill_mode=args.prefill_mode,
+        prefill_chunk_tokens=args.prefill_chunk))
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -6,22 +6,42 @@ compile-time dry-run), the engine walks layers in a Python loop so each
 layer's attention reads/writes the *paged* pool directly — the realistic
 serving dataflow (append one token batched → block-table flash-decode).
 
+Prefill is chunked and batched (the QServe/Atom dataflow): each step
+packs up to ``prefill_chunk_tokens`` prompt tokens from ALL partially-
+prefilled requests into ONE ragged forward per layer (cu_seqlens-style
+offsets), writes the chunk's quantized KV into the pools, and attends
+with ``paged_kv4_prefill_attention`` — fp queries over the int4 paged
+history plus the causal in-flight fp chunk. A prompt's KV is therefore
+never resident in fp beyond one chunk (fp activation footprint is
+bounded by ``prefill_chunk_tokens``), admission only needs pages for the
+next chunk, preemption can fire mid-prefill, and decode steps interleave
+with long-prompt prefill instead of stalling behind an O(T²) monolithic
+forward. The legacy whole-prompt path (``prefill_mode="whole"``) is kept
+as the Fig. 11 time-to-first-token benchmark baseline.
+
 Decode is gather-free: each layer issues exactly ONE paged-attention
 kernel call for the whole decode batch, consuming the physical pools +
-device block tables (O(pages touched) per step). The legacy
-gather-then-attend path (`decode_attention="gather"`, a per-token
-O(context) copy per sequence) is kept solely as the Fig. 11 benchmark
-baseline.
+device block tables (O(pages touched) per step). Per-step page
+destinations are resolved on the host once and reused by every layer's
+scatter (no per-layer block-table sync). The legacy gather-then-attend
+path (`decode_attention="gather"`, a per-token O(context) copy per
+sequence) is kept solely as the Fig. 11 benchmark baseline.
+
+Sequences that hit ``max_pages_per_seq`` finish with
+``stop_reason="length_cap"`` (preemption cannot help them — retrying
+would livelock); prompts that can never fit the cap fail admission with
+``stop_reason="prompt_too_long"``.
 
 Supported families here: dense, moe (the paper's evaluation set —
 LLaMA/Qwen/Mistral class + MoE). Hybrid/ssm decode serve through
 ``LM.decode`` (their state is O(1) — paging buys nothing).
 
 Fault tolerance: ``snapshot()`` captures scheduler state; ``Engine.
-restore`` rebuilds mid-flight work after a crash (prompts re-prefill).
-Sampling is keyed by (request_id, position), but regenerated text is not
-bit-identical in general: re-prefill attends in fp while decode attends
-over the int4 pages, so greedy argmax can flip on near-ties.
+restore`` rebuilds mid-flight work after a crash (prompts re-prefill
+from ``prefill_pos=0`` — partial prefill is device KV, lost with the
+node). Sampling is keyed by (request_id, position), but regenerated text
+is not bit-identical in general: re-prefill attends in fp while decode
+attends over the int4 pages, so greedy argmax can flip on near-ties.
 """
 
 from __future__ import annotations
@@ -56,12 +76,21 @@ class EngineConfig:
     temperature: float = 0.0        # 0 → greedy
     top_k: int = 40
     decode_attention: str = "paged"  # "paged" (gather-free) | "gather"
+    prefill_mode: str = "chunked"    # "chunked" (ragged) | "whole" (baseline)
+    prefill_chunk_tokens: int = 64   # ragged-prefill token budget per step
+    kv_range: float = 16.0           # calibrated |k|,|v| range → int4 scales
 
     def __post_init__(self):
         if self.decode_attention not in ("paged", "gather"):
             raise ValueError(
                 f"decode_attention must be 'paged' or 'gather', got "
                 f"{self.decode_attention!r}")
+        if self.prefill_mode not in ("chunked", "whole"):
+            raise ValueError(
+                f"prefill_mode must be 'chunked' or 'whole', got "
+                f"{self.prefill_mode!r}")
+        if self.prefill_chunk_tokens < 1:
+            raise ValueError("prefill_chunk_tokens must be >= 1")
 
 
 class Engine:
@@ -82,10 +111,16 @@ class Engine:
                 num_pages=ecfg.num_pages, page_size=ecfg.page_size,
                 max_seqs=ecfg.max_batch * 2,
                 max_pages_per_seq=ecfg.max_pages_per_seq),
-            num_layer_slots=cfg.num_layers)
+            num_layer_slots=cfg.num_layers,
+            kv_range=ecfg.kv_range)
         self.sched = Scheduler(ecfg.max_batch, ecfg.max_batch * 2)
         self.steps = 0
         self.tokens_generated = 0
+        # observability: largest fp-token prefill forward issued (bounded
+        # by prefill_chunk_tokens in chunked mode) and how many steps ran
+        # prefill and decode back-to-back (interleave evidence for fig11)
+        self.peak_prefill_fp_tokens = 0
+        self.interleaved_steps = 0
 
     # ------------------------------------------------------------------ API
 
@@ -115,25 +150,60 @@ class Engine:
 
     def step(self):
         self.steps += 1
-        admitted = self.sched.admit(self.cache)
-        for req in admitted:
-            self._prefill(req)
-        runnable = [r for r in self.sched.running if r.prefilled]
+        chunked = self.ecfg.prefill_mode == "chunked"
+        admitted = self.sched.admit(
+            self.cache,
+            first_chunk_tokens=(self.ecfg.prefill_chunk_tokens if chunked
+                                else None))
+        if chunked:
+            prefill_ran = self._prefill_chunked()
+        else:
+            for req in admitted:
+                self._prefill(req)
+            prefill_ran = bool(admitted)
+        runnable = self._reserve_decode_slots(
+            [r for r in self.sched.running if r.prefilled and not r.done])
         if runnable:
-            # page headroom: preempt until every runnable seq can extend
-            i = 0
-            while i < len(runnable):
-                if not self.cache.extend_seq(runnable[i].seq_slot):
-                    victim = self.sched.preempt_one(self.cache)
-                    if victim in runnable:
-                        runnable.remove(victim)
-                    continue
-                i += 1
-            if runnable:
-                self._decode_batch(runnable)
+            self._decode_batch(runnable)
+            if prefill_ran:
+                self.interleaved_steps += 1
         for req in list(self.sched.running):
             if req.done:
                 self.sched.complete(req, self.cache)
+
+    def _reserve_decode_slots(self, runnable: list[Request]) -> list[Request]:
+        """Page headroom for one decode token per runnable sequence.
+
+        Preempts (youngest-first) until every remaining sequence can
+        extend. A sequence already at ``max_pages_per_seq`` can never
+        extend no matter how many pages are freed — it finishes with
+        ``stop_reason="length_cap"`` instead of spinning the loop
+        forever (the seed's infinite-loop bug)."""
+        pending = list(runnable)
+        ready: list[Request] = []
+        while pending:
+            r = pending.pop(0)
+            if self.cache.extend_seq(r.seq_slot):
+                ready.append(r)
+                continue
+            if self.cache.at_capacity(r.seq_slot):
+                # complete NOW (not at end of step): the capped request
+                # must leave sched.running before any later preempt_one
+                # in this loop could victimize it and destroy its output,
+                # and freeing its pages helps the still-pending sequences
+                r.stop_reason = "length_cap"
+                self.sched.complete(r, self.cache)
+                continue
+            victim = self.sched.preempt_one(self.cache)
+            if victim is None:
+                continue            # nothing to evict — stall r this step
+            if victim in pending:
+                pending.remove(victim)
+            elif victim in ready:
+                ready.remove(victim)
+            if victim is not r:
+                pending.insert(0, r)    # retry r with the freed pages
+        return ready
 
     # ------------------------------------------------------------- internals
 
@@ -152,7 +222,11 @@ class Engine:
         return jax.tree.map(lambda a: a[li], self.params["blocks"])
 
     def _prefill(self, req: Request):
+        """[Benchmark baseline] whole-prompt prefill: one O(T²) fp flash
+        forward per request; the full prompt's fp KV is live at once."""
         cfg = self.cfg
+        self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
+                                          len(req.prompt))
         with self.lm._ctx():
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
             x = self.lm._embed(self.params, tokens)
@@ -179,8 +253,144 @@ class Engine:
                            len(req.prompt))
         self.cache.extend_seq(req.seq_slot)
         req.generated.append(tok)
-        req.prefilled = True
+        req.prefill_pos = len(req.prompt)
+        if not req.first_token_at:      # preserve TTFT across preemptions
+            req.first_token_at = time.time()
         self.tokens_generated += 1
+
+    # ------------------------------------------------- chunked ragged prefill
+
+    def _prefill_chunked(self) -> bool:
+        """One chunked-prefill step: pack up to ``prefill_chunk_tokens``
+        prompt tokens across ALL partially-prefilled running requests and
+        push them through one ragged forward. Pages are acquired
+        chunk-by-chunk (``grow_to``); a request that can't get pages this
+        step simply waits (decode keeps draining the pool). Returns True
+        if any prefill work ran."""
+        budget = self.ecfg.prefill_chunk_tokens
+        plan: list[tuple[Request, int, int]] = []   # (req, start, take)
+        for req in self.sched.running:
+            if budget <= 0:
+                break
+            rem = len(req.prompt) - req.prefill_pos
+            if rem <= 0:
+                continue
+            want = req.prefill_pos + min(rem, budget)
+            cap = self.cache.grow_to(req.seq_slot, want)
+            take = min(rem, budget, cap - req.prefill_pos)
+            if take <= 0:
+                continue
+            plan.append((req, req.prefill_pos, take))
+            budget -= take
+        if not plan:
+            # no prefill progress possible: if nothing can decode either,
+            # free pages so the next step can move (mid-prefill preemption)
+            stuck = [r for r in self.sched.running if not r.prefilled]
+            if stuck and not any(r.prefilled for r in self.sched.running):
+                self.sched.preempt_one(self.cache)
+            return False
+        self._prefill_forward(plan)
+        return True
+
+    def _prefill_forward(self, plan: list[tuple[Request, int, int]]):
+        """Run ONE ragged forward over the planned chunk slices.
+
+        Tokens from all planned requests are packed into a single
+        [1, T_total] sequence (cu_seqlens-style offsets) for the
+        position-wise work (norms, W4Ax projections, MLP); attention
+        unpacks to a padded [nseq, C_max] view for the paged prefill
+        kernel, then repacks. Each layer writes the chunk's quantized KV
+        into the pools via destinations precomputed once for the step."""
+        cfg = self.cfg
+        starts = np.asarray([s for _, s, _ in plan])
+        takes = np.asarray([t for _, _, t in plan])
+        slots = np.asarray([r.seq_slot for r, _, _ in plan])
+        nseq, cmax, ttot = len(plan), int(takes.max()), int(takes.sum())
+        cum = np.concatenate([[0], np.cumsum(takes)])
+
+        # ragged layout: packed index → (sequence, in-chunk offset)
+        tok_seq = np.repeat(np.arange(nseq), takes)
+        tok_off = np.concatenate([np.arange(t) for t in takes])
+        tok_pos = starts[tok_seq] + tok_off            # absolute positions
+        tokens = np.concatenate(
+            [r.prompt[s:s + t] for r, s, t in plan]).astype(np.int64)
+
+        # page destinations: ONE host lookup for the step, all layers
+        pages, offs = self.cache.token_dests(slots[tok_seq], tok_pos)
+        block_tables = self.cache.block_tables_device(
+            slots, max(int(starts.max()), 1))
+        ctx = jnp.asarray(starts, jnp.int32)
+        qlens = jnp.asarray(takes, jnp.int32)
+        tseq = jnp.asarray(tok_seq)
+        toff = jnp.asarray(tok_off)
+        # packed↔padded fast paths: equal takes means the seq-major packed
+        # layout IS the padded layout (reshape, no scatter/gather); chunks
+        # with no paged history anywhere are pure fp causal attention
+        uniform = bool((takes == takes[0]).all())
+        no_history = int(starts.max()) == 0
+
+        self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens, ttot)
+        with self.lm._ctx():
+            x = self.lm._embed(self.params,
+                               jnp.asarray(tokens, jnp.int32)[None, :])
+            positions = jnp.asarray(tok_pos)[None, :]
+            for li in range(cfg.num_layers):
+                bp = self._block_params(li)
+                h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+                q, k, v = ATT._project_qkv(
+                    bp["attn"], cfg, h, h, positions, positions)
+                # quantize + page the chunk's KV, then attend: fp queries
+                # over int4 history pages + the causal in-flight fp chunk
+                self.cache.scatter_tokens(li, pages, offs, k, v)
+
+                def pad(a):       # [1, Ttot, Hx, D] → [nseq, Cmax, Hx, D]
+                    if uniform:
+                        return a[0].reshape(nseq, cmax, *a.shape[2:])
+                    z = jnp.zeros((nseq, cmax) + a.shape[2:], a.dtype)
+                    return z.at[tseq, toff].set(a[0])
+
+                if no_history:
+                    # first chunk for every packed prompt: padding keys
+                    # are causally masked, so plain fp flash is exact
+                    out = ATT.flash_attention(pad(q), pad(k), pad(v),
+                                              causal=True)
+                else:
+                    out = ops.paged_kv4_prefill_attention(
+                        pad(q), pad(k), pad(v),
+                        self.cache.k_pool[li], self.cache.k_scale,
+                        self.cache.k_zero,
+                        self.cache.v_pool[li], self.cache.v_scale,
+                        self.cache.v_zero,
+                        block_tables, ctx, qlens, impl=self.quant.impl)
+                if uniform:
+                    a = out.reshape(1, ttot, *out.shape[2:])
+                else:
+                    a = out[tseq, toff][None]          # repack [1, Ttot, ...]
+                a = a.astype(x.dtype).reshape(1, ttot, cfg.q_dim)
+                x = x + C.linear(bp["attn"]["wo"], a)
+                h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+                if "moe" in bp:
+                    y, _ = MLP.moe_apply(bp["moe"], h, cfg)
+                else:
+                    y = MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                x = x + y
+            finished = [(si, r) for si, (r, s, t) in enumerate(plan)
+                        if s + t == len(r.prompt)]
+            if finished:
+                last = [int(cum[si] + takes[si] - 1) for si, _ in finished]
+                hN = C.apply_norm(self.params["final_norm"], x[:, last],
+                                  cfg.norm, cfg.norm_eps)
+                logits = np.asarray(self.lm._head(self.params, hN))
+
+        for r, s, t in plan:
+            r.prefill_pos = s + t
+            self.cache.seq_len[r.seq_slot] = r.prefill_pos
+        for j, (si, r) in enumerate(finished):
+            tok = self._sample(logits[0, j], r.request_id, len(r.prompt))
+            r.generated.append(tok)
+            if not r.first_token_at:    # preserve TTFT across preemptions
+                r.first_token_at = time.time()
+            self.tokens_generated += 1
 
     def _attend_paged(self, li: int, q, block_tables, lengths):
         """One kernel call for the whole decode batch — block tables in,
@@ -213,9 +423,13 @@ class Engine:
         max_len = int(lengths_np.max()) + 1
         paged = self.ecfg.decode_attention == "paged"
         # block tables are fixed for the step (extend_seq already ran);
-        # lengths include the token being appended this step
+        # lengths include the token being appended this step. Page
+        # destinations for the appends are resolved on the host ONCE and
+        # reused by every layer's scatter (was: one block-table lookup +
+        # validation per layer — num_layers host syncs per step).
         block_tables = self.cache.block_tables_device(slots, max_len)
         lengths = jnp.asarray(lengths_np + 1, jnp.int32)
+        pages, offs = self.cache.token_dests(slots, lengths_np)
         with self.lm._ctx():
             x = self.lm._embed(self.params, last)
             positions = jnp.asarray(lengths_np)[:, None]
@@ -226,8 +440,7 @@ class Engine:
                     bp["attn"], cfg, h, h, positions, positions)
                 # write the batch's new KV (one scatter), then attend over
                 # the pools via block tables — one kernel call per layer
-                self.cache.append_tokens(li, slots, k, v,
-                                         positions=lengths_np)
+                self.cache.scatter_tokens(li, pages, offs, k, v)
                 if paged:
                     out = self._attend_paged(li, q, block_tables, lengths)
                 else:

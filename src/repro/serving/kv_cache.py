@@ -3,17 +3,30 @@
 The physical pool is ``[num_pages, page_size, Hkv, D/2]`` uint8 per layer
 stack (one K pool + one V pool, layers stacked on the leading axis).
 Sequences own pages through a block table ``[max_seqs, max_pages]`` int32
-(-1 = unmapped). Appending a token touches exactly one page; eviction
-frees whole pages. Per-channel scales/zeros are static (calibrated), so
-pages never need rescaling — the property that makes int4 paging cheap.
+(-1 = unmapped) plus an O(1) per-sequence page count maintained by the
+allocator (no row scans on the hot path). Appending a token touches
+exactly one page; eviction frees whole pages. Per-channel scales/zeros
+are static (calibrated), so pages never need rescaling — the property
+that makes int4 paging cheap.
 
 The decode hot path is gather-free: `block_tables_device`/
 `lengths_device` hand the physical indirection straight to the
 block-table-aware paged attention kernel, which resolves
 ``(seq, logical page) → physical page`` in its index maps — decode is
-O(pages touched). The legacy gather path (`gather_kv`) that materializes
-a sequence's packed KV contiguously (a per-token O(context) copy) is
-retained only as the benchmark baseline and for tests.
+O(pages touched). Page destinations for a step's appends are computed
+once on the host (`token_dests`) and reused by every layer's
+`scatter_tokens` call — one block-table lookup + validation per step,
+not per layer.
+
+Prefill is chunk-granular: `grow_to` acquires pages for the next chunk
+only (admission never reserves a whole prompt), and `scatter_tokens`
+writes a ragged chunk's quantized KV into precomputed (page, offset)
+destinations — prompts stream through the pools incrementally, so a
+prompt's KV is never resident in fp beyond the in-flight chunk.
+
+The legacy gather path (`gather_kv`) that materializes a sequence's
+packed KV contiguously (a per-token O(context) copy) is retained only as
+the benchmark baseline and for tests.
 """
 
 from __future__ import annotations
@@ -48,7 +61,7 @@ class PagedKV4Cache:
 
     def __init__(self, cfg: ModelConfig, pcfg: PagedKV4Config,
                  num_layer_slots: int,
-                 k_stats=None, v_stats=None):
+                 k_stats=None, v_stats=None, kv_range: float = 16.0):
         self.cfg = cfg
         self.pcfg = pcfg
         hkv, d = cfg.num_kv_heads, cfg.head_dim
@@ -57,16 +70,18 @@ class PagedKV4Cache:
         self.v_pool = jnp.zeros(shape, jnp.uint8)
 
         def default_stats(rng):
+            # symmetric range ±rng mapped onto [0, 15] (asym affine)
             scale = jnp.full((hkv, 1, d), rng / 15.0, jnp.float32)
             zero = jnp.full((hkv, 1, d), 7.5, jnp.float32)
             return scale, zero
 
-        self.k_scale, self.k_zero = k_stats or default_stats(16.0)
-        self.v_scale, self.v_zero = v_stats or default_stats(16.0)
+        self.k_scale, self.k_zero = k_stats or default_stats(kv_range)
+        self.v_scale, self.v_zero = v_stats or default_stats(kv_range)
 
         self.block_table = np.full(
             (pcfg.max_seqs, pcfg.max_pages_per_seq), -1, np.int32)
         self.seq_len = np.zeros((pcfg.max_seqs,), np.int32)
+        self.page_count = np.zeros((pcfg.max_seqs,), np.int32)
         self.free_pages = list(range(pcfg.num_pages - 1, -1, -1))
         self.active = set()
 
@@ -76,32 +91,65 @@ class PagedKV4Cache:
     def pages_free(self) -> int:
         return len(self.free_pages)
 
+    @property
+    def max_tokens_per_seq(self) -> int:
+        return self.pcfg.max_pages_per_seq * self.pcfg.page_size
+
     def pages_needed(self, tokens: int) -> int:
         ps = self.pcfg.page_size
         return (tokens + ps - 1) // ps
 
-    def allocate_seq(self, seq_id: int, prompt_len: int) -> bool:
-        """Reserve pages for a prompt; False if pool exhausted."""
-        need = self.pages_needed(prompt_len)
-        if need > len(self.free_pages) or seq_id in self.active:
+    def allocate_seq(self, seq_id: int, reserve_tokens: int) -> bool:
+        """Reserve pages for ``reserve_tokens`` (a whole prompt, or just
+        its first prefill chunk); False if pool exhausted or the request
+        exceeds the per-sequence page cap."""
+        need = self.pages_needed(reserve_tokens)
+        if (need > len(self.free_pages) or seq_id in self.active
+                or need > self.pcfg.max_pages_per_seq):
             return False
         pages = [self.free_pages.pop() for _ in range(need)]
         self.block_table[seq_id, :need] = pages
         self.seq_len[seq_id] = 0
+        self.page_count[seq_id] = need
         self.active.add(seq_id)
         return True
 
     def extend_seq(self, seq_id: int) -> bool:
-        """Ensure capacity for one more token; may grab a new page."""
+        """Ensure capacity for one more token; may grab a new page.
+        O(1): uses the maintained per-sequence page count, no row scan."""
         ln = int(self.seq_len[seq_id])
         need = self.pages_needed(ln + 1)
-        have = int((self.block_table[seq_id] >= 0).sum())
+        have = int(self.page_count[seq_id])
         if need <= have:
             return True
         if not self.free_pages or need > self.pcfg.max_pages_per_seq:
             return False
         self.block_table[seq_id, have] = self.free_pages.pop()
+        self.page_count[seq_id] = have + 1
         return True
+
+    def at_capacity(self, seq_id: int) -> bool:
+        """True when the sequence can NEVER grow another token — it has
+        hit ``max_pages_per_seq``, or it would need more pages than the
+        whole pool owns — so preemption cannot help it. (The pool bound
+        also guarantees preempted sequences are always re-admissible:
+        their folded prompt is at most the pages they already held.)"""
+        return (self.pages_needed(int(self.seq_len[seq_id]) + 1)
+                > min(self.pcfg.max_pages_per_seq, self.pcfg.num_pages))
+
+    def grow_to(self, seq_id: int, target_tokens: int) -> int:
+        """Acquire pages toward ``target_tokens`` capacity (chunked
+        prefill's page-granular admission). Grabs as many pages as the
+        pool allows, capped at ``max_pages_per_seq``; returns the token
+        capacity actually backed by pages."""
+        cap = min(self.pages_needed(target_tokens),
+                  self.pcfg.max_pages_per_seq)
+        have = int(self.page_count[seq_id])
+        while have < cap and self.free_pages:
+            self.block_table[seq_id, have] = self.free_pages.pop()
+            have += 1
+        self.page_count[seq_id] = have
+        return have * self.pcfg.page_size
 
     def free_seq(self, seq_id: int):
         pages = self.block_table[seq_id]
@@ -109,6 +157,7 @@ class PagedKV4Cache:
             self.free_pages.append(int(p))
         self.block_table[seq_id, :] = -1
         self.seq_len[seq_id] = 0
+        self.page_count[seq_id] = 0
         self.active.discard(seq_id)
 
     # ------------------------------------------------------------- device ops
@@ -158,27 +207,46 @@ class PagedKV4Cache:
         self.v_pool = self.v_pool.at[layer_slot, page, off].set(
             vp[0, :, 0, :])
 
-    def append_tokens(self, layer_slot: int, seq_ids, k, v, positions=None):
-        """Batched one-token append: k/v ``[B, 1, Hkv, D]`` float, one
-        scatter into the pools for the whole decode batch (vs one host
-        round-trip per sequence with :meth:`append_token`). Positions
-        default to each sequence's current length; does NOT advance."""
-        kp, vp = self.quantize_kv(k, v)                # [B, Hkv, 1, D/2]
+    def token_dests(self, seq_ids, positions):
+        """Resolve per-token (physical page, in-page offset) destinations
+        on the host — ONCE per step — so every layer's scatter reuses the
+        same validated device arrays instead of re-reading the block
+        table ``num_layers`` times. → (pages [N] jnp, offs [N] jnp)."""
         seq_ids = np.atleast_1d(np.asarray(seq_ids))
-        pos = (self.seq_len[seq_ids] if positions is None
-               else np.atleast_1d(np.asarray(positions)))
+        pos = np.atleast_1d(np.asarray(positions))
         ps = self.pcfg.page_size
         pages_np = self.block_table[seq_ids, pos // ps]
         if (pages_np < 0).any():
             raise IndexError(
-                f"append_tokens into unmapped page(s) for seqs "
-                f"{seq_ids[pages_np < 0].tolist()} — call extend_seq first")
-        pages = jnp.asarray(pages_np)
-        offs = jnp.asarray(pos % ps)
-        self.k_pool = self.k_pool.at[layer_slot, pages, offs].set(
-            kp[:, :, 0, :])
-        self.v_pool = self.v_pool.at[layer_slot, pages, offs].set(
-            vp[:, :, 0, :])
+                f"write into unmapped page(s) for seqs "
+                f"{seq_ids[pages_np < 0].tolist()} — grow capacity first")
+        return jnp.asarray(pages_np), jnp.asarray(pos % ps)
+
+    def scatter_tokens(self, layer_slot: int, pages, offs, k, v):
+        """Quantize + scatter N tokens' KV into precomputed destinations.
+        k/v is float ``[B, T, Hkv, D]`` with B·T == N tokens in
+        (seq-major) order matching ``pages``/``offs`` — covers both the
+        decode batch ([B, 1, ...]) and a ragged prefill chunk
+        ([1, T, ...]); the chunk is the only fp KV ever materialized for
+        a prompt."""
+        kq, vq = self.quantize_kv(k, v)               # [B, Hkv, T, D/2]
+        hkv, half = kq.shape[1], kq.shape[-1]
+        kq = jnp.moveaxis(kq, 1, 2).reshape(-1, hkv, half)   # [N, Hkv, D/2]
+        vq = jnp.moveaxis(vq, 1, 2).reshape(-1, hkv, half)
+        self.k_pool = self.k_pool.at[layer_slot, pages, offs].set(kq)
+        self.v_pool = self.v_pool.at[layer_slot, pages, offs].set(vq)
+
+    def append_tokens(self, layer_slot: int, seq_ids, k, v, positions=None):
+        """Batched one-token append: k/v ``[B, 1, Hkv, D]`` float, one
+        scatter into the pools for the whole decode batch. Positions
+        default to each sequence's current length; does NOT advance.
+        (Hot path: compute :meth:`token_dests` once per step and call
+        :meth:`scatter_tokens` per layer instead.)"""
+        seq_ids = np.atleast_1d(np.asarray(seq_ids))
+        pos = (self.seq_len[seq_ids] if positions is None
+               else np.atleast_1d(np.asarray(positions)))
+        pages, offs = self.token_dests(seq_ids, pos)
+        self.scatter_tokens(layer_slot, pages, offs, k, v)
 
     def advance(self, seq_ids):
         for s in np.atleast_1d(seq_ids):

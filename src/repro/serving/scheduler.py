@@ -5,13 +5,23 @@ decode batches under a fixed memory budget; this scheduler is where that
 batch is formed. Policy (vLLM-style):
 
 * FCFS admission: a waiting request is admitted when the paged pool can
-  hold its prompt plus one page of headroom.
+  hold its *first prefill chunk* — plus one decode token of headroom
+  once the whole prompt is resident (chunked prefill — pass
+  ``first_chunk_tokens``; whole-prompt admission reserves the full
+  prompt). Prompts that can never fit ``max_pages_per_seq``, or whose
+  prompt + one decode token exceeds the whole pool, are failed
+  immediately with ``stop_reason="prompt_too_long"``.
+* requests track ``prefill_pos`` (prompt tokens already through the
+  model) so prefill proceeds chunk-by-chunk and preemption can fire
+  mid-prefill — a preempted request simply restarts at ``prefill_pos=0``;
 * decode batch = all running sequences (up to ``max_batch``);
 * on pool exhaustion the *youngest* running sequence is preempted back to
   the waiting queue (its pages freed — recomputed on re-admission);
 * ``snapshot``/``restore`` serialize scheduler state so an engine restart
   (node failure) resumes with pending work intact — generated text is
   reproducible because sampling is keyed by (request_id, position).
+  Mid-prefill progress is device KV (lost with the node), so pending
+  requests restore at ``prefill_pos=0`` with generated text folded in.
 """
 
 from __future__ import annotations
@@ -32,11 +42,22 @@ class Request:
     arrived_at: float = 0.0
     generated: list = dataclasses.field(default_factory=list)
     seq_slot: int = -1             # cache slot when running
-    prefilled: bool = False
+    prefill_pos: int = 0           # prompt tokens already through the model
+    stop_reason: Optional[str] = None   # None = ran to max_new_tokens
+    first_token_at: float = 0.0    # wall clock of first generated token
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_pos >= len(self.prompt)
+
+    @prefilled.setter
+    def prefilled(self, value: bool):
+        self.prefill_pos = len(self.prompt) if value else 0
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.max_new_tokens
+        return (self.stop_reason is not None
+                or len(self.generated) >= self.max_new_tokens)
 
     @property
     def total_len(self) -> int:
@@ -58,40 +79,73 @@ class Scheduler:
     def submit(self, req: Request):
         self.waiting.append(req)
 
-    def admit(self, cache) -> list[Request]:
-        """Admit waiting requests while pages + slots are available."""
+    def admit(self, cache,
+              first_chunk_tokens: Optional[int] = None) -> list[Request]:
+        """Admit waiting requests while pages + slots are available.
+
+        ``first_chunk_tokens``: with chunked prefill, admission only
+        needs pages for the first chunk (later chunks acquire pages via
+        ``cache.grow_to``); ``None`` reserves the whole prompt (the
+        whole-prompt baseline path)."""
         admitted = []
         while (self.waiting and self._free_slots
                and len(self.running) < self.max_batch):
             req = self.waiting[0]
-            need = cache.pages_needed(len(req.prompt)) + 1
-            if need > cache.pages_free:
+            if (cache.pages_needed(len(req.prompt))
+                    > cache.pcfg.max_pages_per_seq
+                    or cache.pages_needed(len(req.prompt) + 1)
+                    > cache.pcfg.num_pages):
+                # can never fit the per-seq page budget, or prompt + one
+                # decode token can never fit the whole pool — fail fast
+                # instead of livelocking admission/preemption (chunked
+                # would stream until the pool is exhausted, self-preempt,
+                # and restart forever). Token-granular: a prompt whose
+                # last page has slack for its decode tokens is servable.
+                self.waiting.popleft()
+                req.stop_reason = "prompt_too_long"
+                self.finished.append(req)
+                continue
+            reserve = (len(req.prompt) if first_chunk_tokens is None
+                       else min(len(req.prompt), first_chunk_tokens))
+            # token-granular decode headroom: one extra TOKEN (not a
+            # whole extra page) once the full prompt is resident — a
+            # prompt whose last page has slack admits into an exactly-
+            # sized pool
+            headroom = reserve + 1 if reserve == len(req.prompt) else reserve
+            if cache.pages_needed(headroom) > cache.pages_free:
                 break
             slot = self._free_slots.pop()
-            if not cache.allocate_seq(slot, len(req.prompt)):
+            if not cache.allocate_seq(slot, reserve):
                 self._free_slots.append(slot)
                 break
             req.seq_slot = slot
-            req.prefilled = False
+            req.prefill_pos = 0
             self.waiting.popleft()
             self.running.append(req)
             admitted.append(req)
         return admitted
 
     def preempt_one(self, cache) -> Optional[Request]:
-        """Evict the youngest running sequence to the waiting queue."""
-        if not self.running:
+        """Evict the youngest running sequence to the waiting queue.
+
+        Finished requests (done but not yet completed by the engine's
+        end-of-step sweep) are never victims: preempting one would fold
+        its generated text back into the prompt and silently destroy its
+        output. Their pages are released at completion instead."""
+        candidates = [r for r in self.running if not r.done]
+        if not candidates:
             return None
-        req = max(self.running, key=lambda r: r.arrived_at)
+        req = max(candidates, key=lambda r: r.arrived_at)
         self.running.remove(req)
         cache.free_seq(req.seq_slot)
         self._free_slots.append(req.seq_slot)
         req.seq_slot = -1
-        req.prefilled = False
-        # keep generated text: re-admission prefills prompt+generated
+        # keep generated text: re-admission prefills prompt+generated.
+        # Mid-prefill victims (generated == []) simply restart at 0.
         req.prompt = req.prompt + req.generated
         req.max_new_tokens -= len(req.generated)
         req.generated = []
+        req.prefill_pos = 0
         self.waiting.appendleft(req)
         self.preemptions += 1
         return req
@@ -124,6 +178,7 @@ class Scheduler:
             "request_id": r.request_id,
             "prompt": list(r.prompt),
             "generated": list(r.generated),
+            "stop_reason": r.stop_reason,
         } for r in self.finished]
         return json.dumps({"pending": reqs, "finished": done})
 
@@ -140,5 +195,6 @@ class Scheduler:
             req = Request(request_id=r["request_id"], prompt=r["prompt"],
                           max_new_tokens=0)
             req.generated = r["generated"]
+            req.stop_reason = r.get("stop_reason")
             sched.finished.append(req)
         return sched

@@ -1,8 +1,10 @@
-"""Paged KV4 decode attention vs oracle and vs the gather path.
+"""Paged KV4 attention (decode + chunked prefill) vs oracle and gather.
 
 Sweeps page sizes, ragged lengths (incl. len < one page and len not a
 multiple of page_size), GQA head ratios, and batch > 1 — the contract
-the gather-free serving hot path depends on.
+the gather-free serving hot path depends on. The prefill sweeps add
+ragged chunk lengths, zero-history sequences, and the fp-chunk/int4-
+history boundary the chunked prompt path relies on.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,7 @@ import pytest
 
 from repro.configs.base import get_smoke_config
 from repro.kernels import ops, ref
+from repro.layers.attention import flash_attention
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
 
 
@@ -112,6 +115,103 @@ def test_paged_matches_gather_on_cache(rng):
         vp, bcast(cache.v_scale), bcast(cache.v_zero),
         lens, impl="pallas", bt=ps)
     np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_gather),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- prefill
+
+PREFILL_CASES = [
+    # (b, hq, hkv, d, ps, ctx_lens, q_lens, C)
+    (1, 4, 1, 64, 32, [40], [16], 16),            # MQA, ragged history
+    (2, 8, 2, 64, 32, [0, 33], [8, 3], 8),        # zero-history + ragged
+    (2, 8, 8, 128, 64, [100, 17], [16, 16], 16),  # MHA, len % ps != 0
+    (3, 16, 4, 64, 64, [64, 1, 190], [1, 7, 16], 16),  # GQA, len-1 edges
+]
+
+
+def make_prefill(rng, b, hq, hkv, d, ps, ctx_lens, q_lens, c):
+    kp, ks, kz, vp, vs, vz, tbl, _ = make_paged(
+        rng, b, hkv, d, ps, [max(l, 1) for l in ctx_lens])
+    q = jnp.asarray(rng.normal(size=(b, c, hq, d)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    return (q, kn, vn, kp, ks, kz, vp, vs, vz, tbl,
+            jnp.asarray(ctx_lens, jnp.int32), jnp.asarray(q_lens, jnp.int32))
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,ps,ctx_lens,q_lens,c", PREFILL_CASES)
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_prefill_matches_oracle(rng, b, hq, hkv, d, ps, ctx_lens, q_lens, c,
+                                impl):
+    args = make_prefill(rng, b, hq, hkv, d, ps, ctx_lens, q_lens, c)
+    o_ref = ref.paged_kv4_prefill_attention_ref(*args)
+    o = ops.paged_kv4_prefill_attention(*args, impl=impl)
+    # rows past q_lens are padding garbage — compare valid rows only
+    for bi, ql in enumerate(q_lens):
+        np.testing.assert_allclose(
+            np.asarray(o)[bi, :ql], np.asarray(o_ref)[bi, :ql],
+            rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_prefill_zero_history_is_causal_flash(rng, impl):
+    """ctx = 0 → the kernel is plain fp causal attention over the chunk
+    (the whole-prompt-in-one-chunk case must match the fp prefill path)."""
+    b, hq, hkv, d, ps, c = 2, 8, 2, 64, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, c, hq, d)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    kp = jnp.zeros((1, ps, hkv, d // 2), jnp.uint8)
+    ks = jnp.ones((hkv, 1, d), jnp.float32)
+    kz = jnp.zeros((hkv, 1, d), jnp.float32)
+    o = ops.paged_kv4_prefill_attention(
+        q, kn, vn, kp, ks, kz, kp, ks, kz,
+        jnp.zeros((b, 0), jnp.int32), jnp.zeros((b,), jnp.int32),
+        jnp.full((b,), c, jnp.int32), impl=impl)
+    o_flash = flash_attention(q, kn, vn, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_flash),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_last_row_matches_decode(rng):
+    """A single-query chunk over history of length L equals the DECODE
+    kernel attending over the same pages with the new token's KV written
+    at L — the prefill/decode seam is seamless. The new token's KV is
+    placed exactly on the int4 grid so fp-chunk attention (prefill) and
+    int4-pool attention (decode) see identical values."""
+    b, hq, hkv, d, ps = 2, 8, 2, 64, 32
+    lengths = [40, 17]
+    kp, ks, kz, vp, vs, vz, tbl, _ = make_paged(
+        rng, b, hkv, d, ps, [l + 1 for l in lengths])
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    # grid-exact new token: nibbles → dequantize → fp chunk values
+    nk = rng.integers(0, 16, size=(b, hkv, d)).astype(np.float32)
+    nv = rng.integers(0, 16, size=(b, hkv, d)).astype(np.float32)
+    kn = ((nk - np.asarray(kz)[None, :, 0]) * np.asarray(ks)[None, :, 0])
+    vn = ((nv - np.asarray(vz)[None, :, 0]) * np.asarray(vs)[None, :, 0])
+    kn = jnp.asarray(kn[:, None], jnp.float32)     # [B, 1, Hkv, D]
+    vn = jnp.asarray(vn[:, None], jnp.float32)
+    o_pre = ops.paged_kv4_prefill_attention(
+        q, kn, vn, kp, ks, kz, vp, vs, vz, tbl,
+        jnp.asarray(lengths, jnp.int32), jnp.ones((b,), jnp.int32),
+        impl="pallas")
+    # write the same token (packed nibbles) into the pools at position L
+    half = d // 2
+    pk = (nk[..., :half].astype(np.uint8)
+          | (nk[..., half:].astype(np.uint8) << 4))
+    pv = (nv[..., :half].astype(np.uint8)
+          | (nv[..., half:].astype(np.uint8) << 4))
+    kp_np, vp_np = np.asarray(kp).copy(), np.asarray(vp).copy()
+    tbl_np = np.asarray(tbl)
+    for bi, l in enumerate(lengths):
+        page, off = tbl_np[bi, l // ps], l % ps
+        kp_np[page, off] = pk[bi]
+        vp_np[page, off] = pv[bi]
+    o_dec = ops.paged_kv4_decode_attention(
+        q[:, 0], jnp.asarray(kp_np), ks, kz, jnp.asarray(vp_np), vs, vz,
+        tbl, jnp.asarray([l + 1 for l in lengths], jnp.int32),
+        impl="pallas")
+    np.testing.assert_allclose(np.asarray(o_pre)[:, 0], np.asarray(o_dec),
                                rtol=1e-4, atol=1e-4)
 
 

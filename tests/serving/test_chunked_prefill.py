@@ -1,0 +1,149 @@
+"""Chunked ragged prefill: parity with whole-prompt prefill, bounded fp
+footprint, ragged batching across requests, mid-prefill preemption and
+crash-restore.
+
+Parity uses weight-only quantization (activation quant amplifies benign
+bf16 fusion noise) and a calibrated ``kv_range`` so int4 KV history
+error stays below greedy argmax margins — chunked and whole-prompt
+prefill then produce token-identical greedy output.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.engine import Engine, EngineConfig
+
+PROMPT_LENS = (40, 7, 23, 64)       # ragged, several spanning many chunks
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in PROMPT_LENS]
+    return cfg, qc, qparams, prompts
+
+
+def make_engine(cfg, qc, qparams, mode, chunk, **kw):
+    defaults = dict(max_batch=4, num_pages=96, page_size=8,
+                    max_pages_per_seq=16, prefill_mode=mode,
+                    prefill_chunk_tokens=chunk, kv_range=4.0)
+    defaults.update(kw)
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults))
+
+
+def run_engine(eng, prompts, max_new=MAX_NEW, max_steps=300):
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, max_new)
+    done = eng.run(max_steps=max_steps)
+    return {r.request_id: list(r.generated) for r in done}
+
+
+@pytest.fixture(scope="module")
+def whole_prompt_tokens(setup):
+    cfg, qc, qparams, prompts = setup
+    eng = make_engine(cfg, qc, qparams, "whole", 64)
+    toks = run_engine(eng, prompts)
+    assert eng.peak_prefill_fp_tokens == max(PROMPT_LENS)
+    return toks
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 128])
+def test_chunked_matches_whole_prompt_greedy(setup, whole_prompt_tokens,
+                                             chunk):
+    """Greedy token-identical across chunk sizes: below / equal / above
+    the longest prompt (the last = single-chunk fp, exact by math)."""
+    cfg, qc, qparams, prompts = setup
+    eng = make_engine(cfg, qc, qparams, "chunked", chunk)
+    toks = run_engine(eng, prompts)
+    assert set(toks) == set(whole_prompt_tokens)
+    for rid, expect in whole_prompt_tokens.items():
+        assert toks[rid] == expect, (chunk, rid, toks[rid], expect)
+    # fp prefill footprint is bounded by the chunk budget
+    assert eng.peak_prefill_fp_tokens <= chunk
+
+
+def test_prefill_memory_bounded_by_chunk(setup):
+    """The engine never holds a whole prompt's fp KV: a 64-token prompt
+    streams through 16-token forwards."""
+    cfg, qc, qparams, prompts = setup
+    eng = make_engine(cfg, qc, qparams, "chunked", 16)
+    run_engine(eng, prompts)
+    assert eng.peak_prefill_fp_tokens <= 16
+    assert eng.steps > len(max(prompts, key=len)) // 16  # multi-step stream
+
+
+def test_ragged_batch_prefills_in_one_step(setup):
+    """Prompts from several admitted requests share ONE ragged forward:
+    a single step prefills all of them and samples each first token."""
+    cfg, qc, qparams, _ = setup
+    eng = make_engine(cfg, qc, qparams, "chunked", 32)
+    for i, n in enumerate((5, 9, 3)):
+        eng.add_request(i, list(range(1, n + 1)), 4)
+    eng.step()
+    # one step prefilled every prompt and sampled each first token (the
+    # same step then also ran one decode, so ≥ 1 token per request)
+    assert all(r.prefilled and len(r.generated) >= 1
+               for r in eng.sched.running)
+
+
+def test_decode_interleaves_with_long_prefill(setup):
+    """While a long prompt streams chunk-by-chunk, already-running
+    requests keep decoding — the interference the chunking removes."""
+    cfg, qc, qparams, _ = setup
+    eng = make_engine(cfg, qc, qparams, "chunked", 8)
+    eng.add_request(0, list(range(1, 9)), 12)       # short, decodes early
+    eng.add_request(1, list(range(1, 49)), 4)       # long, 6 chunks
+    eng.run(max_steps=300)
+    assert eng.interleaved_steps >= 3
+
+
+def test_mid_prefill_preemption_restarts_cleanly(setup):
+    """Preempting a request mid-prefill resets prefill_pos, frees pages,
+    and re-admission completes it with full output length."""
+    cfg, qc, qparams, _ = setup
+    eng = make_engine(cfg, qc, qparams, "chunked", 8)
+    prompt = list(range(1, 33))
+    eng.add_request(0, prompt, 4)
+    eng.step()                                       # one 8-token chunk
+    req = eng.sched.running[0]
+    assert 0 < req.prefill_pos < len(prompt)
+    victim = eng.sched.preempt_one(eng.cache)
+    assert victim is req and victim.prefill_pos == 0
+    assert victim.prompt == prompt                   # nothing generated yet
+    done = eng.run(max_steps=200)
+    assert len(done) == 1 and len(done[0].generated) == 4
+
+
+def test_snapshot_restore_mid_prefill(setup):
+    """Crash while prompts are mid-prefill: pending work survives, the
+    restored engine re-prefills from scratch and completes everything."""
+    cfg, qc, qparams, prompts = setup
+    ecfg = EngineConfig(max_batch=4, num_pages=96, page_size=8,
+                        max_pages_per_seq=16, prefill_mode="chunked",
+                        prefill_chunk_tokens=8, kv_range=4.0)
+    eng = Engine(cfg, qparams, qc, ecfg)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, MAX_NEW)
+    eng.step()                       # several requests now mid-prefill
+    mid = [r for r in eng.sched.running if 0 < r.prefill_pos < len(r.prompt)]
+    assert mid, "expected at least one mid-prefill request"
+    blob = eng.snapshot()
+    del eng                          # crash
+
+    eng2 = Engine.restore(blob, cfg, qparams, qc, ecfg)
+    assert eng2.cache.pages_free == ecfg.num_pages
+    done = eng2.run(max_steps=400)
+    assert sorted(r.request_id for r in done) == list(range(len(prompts)))
+    for r in done:
+        # no tokens were generated pre-crash, so prompts are untouched
+        assert len(r.prompt) == PROMPT_LENS[r.request_id]
+        assert len(r.generated) == MAX_NEW

@@ -122,6 +122,95 @@ def test_engine_snapshot_restore_mid_decode(setup):
     assert not eng2.cache.active
 
 
+def test_engine_page_cap_terminates(setup):
+    """Regression: a sequence that hits max_pages_per_seq can never
+    extend (no amount of preemption frees ITS cap), which used to spin
+    the headroom loop / engine forever. It must finish with
+    stop_reason="length_cap" and whatever it generated so far."""
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=2, num_pages=64, page_size=4,
+                              max_pages_per_seq=2))      # cap = 8 tokens
+    eng.add_request(0, [1, 2, 3, 4, 5], 10)
+    done = eng.run(max_steps=50)
+    assert len(done) == 1
+    r = done[0]
+    assert r.stop_reason == "length_cap"
+    assert 0 < len(r.generated) < 10
+    assert eng.steps < 50                    # terminated, not max_steps'd
+    # pool fully reclaimed
+    assert eng.cache.pages_free == 64 and not eng.cache.active
+
+
+def test_engine_prompt_too_long_fails_fast(setup):
+    """A prompt that can never fit the per-seq page budget fails at
+    admission instead of livelocking admit/preempt cycles."""
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=2, num_pages=64, page_size=4,
+                              max_pages_per_seq=2))      # cap = 8 tokens
+    eng.add_request(0, list(range(1, 21)), 4)            # 20-token prompt
+    eng.add_request(1, [1, 2, 3], 4)                     # healthy request
+    done = eng.run(max_steps=50)
+    by_id = {r.request_id: r for r in done}
+    assert by_id[0].stop_reason == "prompt_too_long"
+    assert by_id[0].generated == []
+    assert by_id[1].stop_reason is None
+    assert len(by_id[1].generated) == 4
+
+
+def test_engine_prompt_bigger_than_pool_fails_fast(setup):
+    """Regression: a prompt within the per-seq cap but larger than the
+    whole pool used to make chunked prefill stream to pool exhaustion,
+    self-preempt, and restart from zero forever."""
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=2, num_pages=8, page_size=8,
+                              max_pages_per_seq=16,       # cap 128 > pool 64
+                              prefill_chunk_tokens=16))
+    eng.add_request(0, list(range(1, 101)), 4)            # 13 pages > pool
+    eng.add_request(1, [1, 2, 3], 4)
+    done = eng.run(max_steps=60)
+    by_id = {r.request_id: r for r in done}
+    assert by_id[0].stop_reason == "prompt_too_long"
+    assert len(by_id[1].generated) == 4
+    assert eng.steps < 60
+
+
+def test_engine_pool_cap_preserves_output(setup):
+    """Regression: a sequence that grows to fill the ENTIRE pool used to
+    be preempted (folding its output into the prompt) and then rejected
+    as prompt_too_long with empty output. It must instead finish
+    length_cap, keeping everything it generated."""
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=2, num_pages=4, page_size=4,
+                              max_pages_per_seq=8))    # pool 16 < cap 32
+    eng.add_request(0, [1, 2, 3], 100)
+    done = eng.run(max_steps=60)
+    assert len(done) == 1
+    r = done[0]
+    assert r.stop_reason == "length_cap"
+    assert len(r.prompt) == 3                  # output never folded away
+    # 3 + 13 written tokens fill the 16-token pool; the 14th generated
+    # token was sampled by the last decode step and needs no page
+    assert len(r.generated) == 14
+    assert eng.sched.preemptions == 0
+
+
+def test_engine_prompt_fills_pool_with_slack_is_served(setup):
+    """Token-granular pool admission: a prompt whose last page has slack
+    for its decode tokens is fully servable, not prompt_too_long."""
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=2, num_pages=4, page_size=4,
+                              max_pages_per_seq=8))
+    eng.add_request(0, list(range(1, 15)), 2)  # 14 + 2 = 16 = exact pool
+    done = eng.run(max_steps=30)
+    assert done[0].stop_reason is None
+    assert len(done[0].generated) == 2
+
+
 def test_engine_preemption_under_pressure(setup):
     cfg, qc, qparams = setup
     # tiny pool forces preemption while decoding long generations
@@ -133,4 +222,7 @@ def test_engine_preemption_under_pressure(setup):
     done = eng.run(max_steps=200)
     assert len(done) == 3
     for r in done:
-        assert len(r.generated) == 8
+        # preemption folds generated text into the prompt (original
+        # prompts were 5 tokens): total output across incarnations == 8
+        assert (len(r.prompt) - 5) + len(r.generated) == 8
+        assert r.stop_reason is None

@@ -1,9 +1,68 @@
-"""Paged KV4 pool: write_prompt/append/gather roundtrip vs direct quant."""
+"""Paged KV4 pool: write/append/gather roundtrips vs direct quant, plus
+allocator invariants for the O(1) page-count bookkeeping and chunked
+page acquisition (grow_to)."""
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_smoke_config
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+
+
+def table_counts(cache):
+    return (cache.block_table >= 0).sum(axis=1).astype(np.int32)
+
+
+def test_page_count_tracks_block_table():
+    """page_count (the O(1) replacement for the extend_seq row scan)
+    stays equal to the block-table row population through allocate /
+    extend / grow_to / free."""
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=16, page_size=4, max_seqs=4,
+                            max_pages_per_seq=8), 1)
+    assert cache.allocate_seq(0, 10)            # 3 pages
+    assert cache.allocate_seq(1, 1)             # 1 page
+    np.testing.assert_array_equal(cache.page_count, table_counts(cache))
+    cache.seq_len[0] = 10
+    for _ in range(3):                          # 11th token → 3 pages still
+        assert cache.extend_seq(0)
+        cache.seq_len[0] += 1
+    np.testing.assert_array_equal(cache.page_count, table_counts(cache))
+    assert cache.grow_to(1, 14) == 16           # 4 pages (page-granular)
+    np.testing.assert_array_equal(cache.page_count, table_counts(cache))
+    cache.free_seq(0)
+    cache.free_seq(1)
+    np.testing.assert_array_equal(cache.page_count, np.zeros(4, np.int32))
+    assert cache.pages_free == 16
+
+
+def test_grow_to_partial_and_capped():
+    """grow_to grabs what the pool has (partial capacity is usable for a
+    smaller chunk) and never exceeds max_pages_per_seq."""
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=4, page_size=8, max_seqs=4,
+                            max_pages_per_seq=3), 1)
+    assert cache.allocate_seq(0, 8)             # 1 page
+    assert cache.allocate_seq(1, 16)            # 2 pages → 1 page left
+    assert cache.grow_to(0, 24) == 16           # wanted 3, pool had 1 more
+    cache.free_seq(1)
+    assert cache.grow_to(0, 24) == 24           # now fully backed
+    assert cache.grow_to(0, 100) == 24          # capped at 3 pages
+    assert cache.at_capacity(0) is False        # seq_len still short
+    cache.seq_len[0] = 24
+    assert cache.at_capacity(0) is True
+
+
+def test_allocate_rejects_over_cap():
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=16, page_size=4, max_seqs=4,
+                            max_pages_per_seq=2), 1)
+    assert not cache.allocate_seq(0, 9)         # 3 pages > cap 2
+    assert cache.pages_free == 16 and 0 not in cache.active
+    assert cache.allocate_seq(0, 8)
+    assert cache.max_tokens_per_seq == 8
 
 
 def test_write_gather_roundtrip(rng):

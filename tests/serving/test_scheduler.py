@@ -38,6 +38,86 @@ def test_admission_respects_capacity():
     assert cache.pages_free == 1
 
 
+def test_chunked_admission_reserves_first_chunk_only():
+    """With first_chunk_tokens, admission needs pages for one chunk — a
+    prompt that whole-prompt admission can't fit under transient pool
+    pressure still gets in and acquires later pages via grow_to."""
+    cache = make_cache(num_pages=4, page_size=8)
+    assert cache.allocate_seq(7, 8)          # another seq holds 1 page
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, list(range(24)), 4, arrived_at=0.0))  # 3 pages
+    assert sched.admit(cache) == []          # whole: needs 3+1 > 3 free
+    admitted = sched.admit(cache, first_chunk_tokens=8)
+    assert len(admitted) == 1
+    assert int(cache.page_count[admitted[0].seq_slot]) == 1
+    # remaining pages arrive chunk-by-chunk (as the other seq drains)
+    cache.free_seq(7)
+    assert cache.grow_to(admitted[0].seq_slot, 24) == 24
+
+
+def test_admission_rejects_uncappable_prompt():
+    """Prompts that exceed max_pages_per_seq fail fast with a
+    stop_reason instead of being admitted into a livelock."""
+    cache = make_cache(num_pages=16, page_size=8)     # cap = 8*8 = 64 tok
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, list(range(100)), 4, arrived_at=0.0))
+    sched.submit(Request(1, list(range(8)), 4, arrived_at=1.0))
+    admitted = sched.admit(cache)
+    assert [r.request_id for r in admitted] == [1]
+    assert sched.finished[0].request_id == 0
+    assert sched.finished[0].stop_reason == "prompt_too_long"
+
+
+def test_admission_rejects_prompt_bigger_than_pool():
+    """A prompt within the per-seq cap but bigger than the WHOLE pool
+    (+1 decode headroom) also fails fast — chunked prefill would stream
+    until the pool is exhausted, self-preempt, and restart forever."""
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=8, page_size=8, max_seqs=8,
+                            max_pages_per_seq=16), 1)   # cap 128 > pool 64
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, list(range(100)), 4, arrived_at=0.0))  # 13 pages
+    assert sched.admit(cache, first_chunk_tokens=16) == []
+    assert sched.finished[0].stop_reason == "prompt_too_long"
+    # boundary: exactly pool-sized (+1 headroom) prompts stay admissible
+    sched.submit(Request(1, list(range(56)), 4, arrived_at=1.0))   # 7+1 = 8
+    assert [r.request_id for r in sched.admit(cache, first_chunk_tokens=16)
+            ] == [1]
+
+
+def test_preempt_one_skips_finished_requests():
+    """A request that is done (but not yet swept out of running) must
+    never be preempted — that would fold its generated text back into
+    the prompt and silently destroy its output."""
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, [1, 2, 3], 10, arrived_at=0.0))
+    sched.submit(Request(1, [4, 5, 6], 2, arrived_at=1.0))   # youngest
+    sched.admit(cache)
+    done_req = sched.running[1]
+    done_req.generated = [7, 8]                              # done (2/2)
+    assert done_req.done
+    victim = sched.preempt_one(cache)
+    assert victim.request_id == 0                # skipped the finished one
+    assert done_req.generated == [7, 8]          # output intact
+    assert sched.preempt_one(cache) is None      # only done_req left
+
+
+def test_mid_prefill_preemption_resets_progress():
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    sched.submit(Request(0, list(range(20)), 4, arrived_at=0.0))
+    sched.admit(cache, first_chunk_tokens=8)
+    req = sched.running[0]
+    req.prefill_pos = 8                      # mid-prefill
+    victim = sched.preempt_one(cache)
+    assert victim is req
+    assert victim.prefill_pos == 0 and not victim.prefilled
+    assert victim.prompt == list(range(20))  # prompt untouched
+    assert victim.max_new_tokens == 4
+
+
 def test_preemption_requeues_with_progress():
     cache = make_cache()
     sched = Scheduler(max_batch=4, max_seqs=8)
