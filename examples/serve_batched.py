@@ -34,7 +34,8 @@ dt = time.time() - t0
 tokens = sum(len(r.generated) for r in finished)
 print(f"{len(finished)} requests, {tokens} tokens in {dt:.1f}s "
       f"→ {tokens/dt:.1f} tok/s "
-      f"(engine steps={engine.steps}, preemptions={engine.sched.preemptions})")
+      f"(engine steps={engine.steps}, forwards={engine.forward_calls}, "
+      f"traces={engine.trace_count}, preemptions={engine.sched.preemptions})")
 for r in sorted(finished, key=lambda r: r.request_id)[:5]:
     print(f"  req {r.request_id:2d}: {r.generated}")
 

@@ -37,6 +37,11 @@ def main():
                     choices=["chunked", "whole"])
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="ragged-prefill token budget per step")
+    ap.add_argument("--step-mode", default="unified",
+                    choices=["unified", "split"],
+                    help="unified: ONE forward/step over decode rows + "
+                         "prompt chunks (bucketed shapes); split: "
+                         "separate prefill + decode forwards (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,7 +61,8 @@ def main():
         max_batch=args.max_batch, num_pages=args.pages,
         page_size=args.page_size, temperature=args.temperature,
         prefill_mode=args.prefill_mode,
-        prefill_chunk_tokens=args.prefill_chunk))
+        prefill_chunk_tokens=args.prefill_chunk,
+        unified_step=(args.step_mode == "unified")))
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -70,7 +76,8 @@ def main():
     total_tokens = sum(len(r.generated) for r in finished)
     print(f"[done] {len(finished)} requests, {total_tokens} tokens in "
           f"{dt:.1f}s → {total_tokens/dt:.1f} tok/s "
-          f"(steps={eng.steps}, preemptions={eng.sched.preemptions})",
+          f"(steps={eng.steps}, forwards={eng.forward_calls}, "
+          f"traces={eng.trace_count}, preemptions={eng.sched.preemptions})",
           flush=True)
     for r in finished[:4]:
         print(f"  req {r.request_id}: {r.generated[:12]}…", flush=True)

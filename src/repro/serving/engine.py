@@ -4,28 +4,43 @@ The engine is the paper's §5 system layer: W4Ax projections + int4 paged
 KV + vLLM-style scheduling. Unlike the scanned `LM.decode` (used for the
 compile-time dry-run), the engine walks layers in a Python loop so each
 layer's attention reads/writes the *paged* pool directly — the realistic
-serving dataflow (append one token batched → block-table flash-decode).
+serving dataflow.
 
-Prefill is chunked and batched (the QServe/Atom dataflow): each step
-packs up to ``prefill_chunk_tokens`` prompt tokens from ALL partially-
-prefilled requests into ONE ragged forward per layer (cu_seqlens-style
-offsets), writes the chunk's quantized KV into the pools, and attends
-with ``paged_kv4_prefill_attention`` — fp queries over the int4 paged
-history plus the causal in-flight fp chunk. A prompt's KV is therefore
-never resident in fp beyond one chunk (fp activation footprint is
-bounded by ``prefill_chunk_tokens``), admission only needs pages for the
-next chunk, preemption can fire mid-prefill, and decode steps interleave
-with long-prompt prefill instead of stalling behind an O(T²) monolithic
-forward. The legacy whole-prompt path (``prefill_mode="whole"``) is kept
-as the Fig. 11 time-to-first-token benchmark baseline.
+**Unified step (the default).** Each step issues exactly ONE forward per
+layer: decode tokens (a chunk of 1 with paged int4 history) and prompt
+chunks from all partially-prefilled requests are packed into a single
+ragged batch — one embed, one W4Ax projection pass per layer, one KV
+scatter, one ``paged_kv4_prefill_attention`` call, one MLP, one head
+call over the union of finished-prefill rows and decode rows, and one
+vectorized sampling call. This is the QServe/Atom dataflow the paper's
+throughput rests on: the accelerator sees one dense mixed-precision
+stream instead of alternating prefill and decode passes (half the kernel
+launches and weight traffic per step).
 
-Decode is gather-free: each layer issues exactly ONE paged-attention
-kernel call for the whole decode batch, consuming the physical pools +
-device block tables (O(pages touched) per step). Per-step page
-destinations are resolved on the host once and reused by every layer's
-scatter (no per-layer block-table sync). The legacy gather-then-attend
-path (`decode_attention="gather"`, a per-token O(context) copy per
-sequence) is kept solely as the Fig. 11 benchmark baseline.
+The unified forward is jitted over **bucketed shapes**: the packed
+layout ``(nseq, cmax, ttot, npages)`` is rounded up to powers of two, so
+steady-state ragged traffic hits the jit cache instead of retracing
+every ``(nseq, cmax, ttot)`` combination (the dominant cost of the CPU
+smoke engine). Padding tokens carry out-of-range scatter destinations
+(dropped writes) and zero-length rows (masked in attention), so padding
+is semantically inert. ``Engine.trace_count`` counts distinct compiled
+forward variants — it plateaus after warmup; ``forward_calls`` proves
+the one-forward-per-step invariant.
+
+Prefill is chunked and ragged: the scheduler plans up to
+``prefill_chunk_tokens`` prompt tokens per step (budget shared with the
+step's decode rows, start round-robined so one long prompt cannot
+starve the rest), writes each chunk's quantized KV into the pools, and
+attends fp-queries-over-int4-history — a prompt's KV is never resident
+in fp beyond one chunk. Admission only needs pages for the next chunk
+and preemption can fire mid-prefill.
+
+**Benchmark baselines** (Fig. 11): ``unified_step=False`` splits the
+step back into a ragged prefill forward plus a separate decode forward
+(the PR-2 dataflow); ``prefill_mode="whole"`` runs one O(T²) fp forward
+per prompt (TTFT baseline); ``decode_attention="gather"`` materializes
+each sequence's packed KV per step (the seed's dataflow). All three
+imply the split step.
 
 Sequences that hit ``max_pages_per_seq`` finish with
 ``stop_reason="length_cap"`` (preemption cannot help them — retrying
@@ -47,6 +62,7 @@ attends over the int4 pages, so greedy argmax can flip on near-ties.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -55,7 +71,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import qlinear as QL
 from repro.kernels import ops
 from repro.layers import attention as ATT
 from repro.layers import common as C
@@ -65,6 +80,17 @@ from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "EngineConfig"]
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    """Round ``n`` up to a power of two (≥ lo) — the jit-cache shape key."""
+    return max(lo, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    out = np.full((n,), fill, np.int32)
+    out[: len(a)] = a
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +105,8 @@ class EngineConfig:
     prefill_mode: str = "chunked"    # "chunked" (ragged) | "whole" (baseline)
     prefill_chunk_tokens: int = 64   # ragged-prefill token budget per step
     kv_range: float = 16.0           # calibrated |k|,|v| range → int4 scales
+    unified_step: bool = True        # ONE forward/step (decode ∪ prefill);
+    #                                  False → split-step fig11 baseline
 
     def __post_init__(self):
         if self.decode_attention not in ("paged", "gather"):
@@ -91,6 +119,13 @@ class EngineConfig:
                 f"{self.prefill_mode!r}")
         if self.prefill_chunk_tokens < 1:
             raise ValueError("prefill_chunk_tokens must be >= 1")
+
+    @property
+    def unified(self) -> bool:
+        """Unified step needs the chunked ragged path and the paged
+        kernel; the whole-prompt / gather baselines imply a split step."""
+        return (self.unified_step and self.prefill_mode == "chunked"
+                and self.decode_attention == "paged")
 
 
 class Engine:
@@ -117,10 +152,20 @@ class Engine:
         self.steps = 0
         self.tokens_generated = 0
         # observability: largest fp-token prefill forward issued (bounded
-        # by prefill_chunk_tokens in chunked mode) and how many steps ran
-        # prefill and decode back-to-back (interleave evidence for fig11)
+        # by prefill_chunk_tokens in chunked mode), steps that ran
+        # prefill and decode work back-to-back (interleave evidence for
+        # fig11), model forwards issued (unified: exactly one per step
+        # with work), and distinct compiled forward variants (unified:
+        # real jit traces, counted inside the traced body; split: one per
+        # new packed-shape signature — the eager dispatch cache key)
         self.peak_prefill_fp_tokens = 0
         self.interleaved_steps = 0
+        self.forward_calls = 0
+        self.trace_count = 0
+        self._fwd_shapes: set = set()
+        self._gather_bcast: dict = {}      # bsz → broadcast scales/zeros
+        self._fwd = jax.jit(self._unified_forward, static_argnums=(0, 1))
+        self._sample_fn = None             # lazily jitted batched sampler
 
     # ------------------------------------------------------------------ API
 
@@ -155,8 +200,54 @@ class Engine:
             self.cache,
             first_chunk_tokens=(self.ecfg.prefill_chunk_tokens if chunked
                                 else None))
+        # chunk rows and decode rows share one token budget: the decode
+        # batch debits the prefill plan so the forward stays bounded by
+        # ~prefill_chunk_tokens (min 1 keeps long prompts progressing)
+        n_decode_est = sum(1 for r in self.sched.running
+                           if r.prefilled and not r.done)
+        budget = max(1, self.ecfg.prefill_chunk_tokens - n_decode_est)
+        if self.ecfg.unified:
+            self._step_unified(budget)
+        else:
+            self._step_split(admitted, chunked, budget)
+        for req in list(self.sched.running):
+            if req.done:
+                self.sched.complete(req, self.cache)
+
+    def _step_unified(self, budget: int):
+        """ONE forward for the union of decode rows and prompt chunks.
+
+        Decode slots are reserved *before* the prefill plan: reservation
+        can preempt a mid-prefill victim, which would invalidate a plan
+        built earlier."""
+        decode = self._reserve_decode_slots(
+            [r for r in self.sched.running if r.prefilled and not r.done])
+        plan = self.sched.plan_prefill(self.cache, budget)
+        if not plan and not decode:
+            # no forward possible: if prompts are stuck with nothing
+            # decodable, free pages so the next step can move
+            stuck = [r for r in self.sched.running if not r.prefilled]
+            if stuck and not any(r.prefilled for r in self.sched.running):
+                self.sched.preempt_one(self.cache)
+            return
+        if plan and decode:
+            self.interleaved_steps += 1
+        self._forward_step(plan, decode)
+
+    def _step_split(self, admitted: list[Request], chunked: bool,
+                    budget: int):
+        """[Benchmark baseline] the PR-2 two-forward step: ragged prefill
+        chunk, then a separate decode forward."""
         if chunked:
-            prefill_ran = self._prefill_chunked()
+            plan = self.sched.plan_prefill(self.cache, budget)
+            if plan:
+                self._prefill_forward(plan)
+            else:
+                stuck = [r for r in self.sched.running if not r.prefilled]
+                if stuck and not any(r.prefilled
+                                     for r in self.sched.running):
+                    self.sched.preempt_one(self.cache)
+            prefill_ran = bool(plan)
         else:
             for req in admitted:
                 self._prefill(req)
@@ -167,9 +258,6 @@ class Engine:
             self._decode_batch(runnable)
             if prefill_ran:
                 self.interleaved_steps += 1
-        for req in list(self.sched.running):
-            if req.done:
-                self.sched.complete(req, self.cache)
 
     def _reserve_decode_slots(self, runnable: list[Request]) -> list[Request]:
         """Page headroom for one decode token per runnable sequence.
@@ -205,21 +293,218 @@ class Engine:
                 pending.insert(0, r)    # retry r with the freed pages
         return ready
 
-    # ------------------------------------------------------------- internals
+    # ------------------------------------------------------------- sampling
+
+    def _make_sample_fn(self):
+        temp, top_k = self.ecfg.temperature, self.ecfg.top_k
+
+        def sample(logits, rids, positions):
+            key0 = jax.random.PRNGKey(0)
+            keys = jax.vmap(lambda r, p: jax.random.fold_in(
+                jax.random.fold_in(key0, r), p))(rids, positions)
+            topv, topi = jax.lax.top_k(logits / temp, top_k)
+            idx = jax.vmap(jax.random.categorical)(keys, topv)
+            return jnp.take_along_axis(topi, idx[:, None], axis=1)[:, 0]
+
+        return jax.jit(sample)
+
+    def _sample_batch(self, logits: np.ndarray, request_ids: list[int],
+                      positions: list[int]) -> list[int]:
+        """ONE vectorized sampling call for all rows needing a token
+        this step (was: a per-request Python loop of top_k/categorical
+        calls, each a fresh trace). Rows are padded up to a power-of-two
+        bucket so steady-state steps reuse the compiled sampler."""
+        n = logits.shape[0]
+        if self.ecfg.temperature <= 0.0:
+            return [int(t) for t in np.argmax(logits, axis=-1)]
+        if self._sample_fn is None:
+            self._sample_fn = self._make_sample_fn()
+        nb = _bucket(n)
+        lg = np.zeros((nb, logits.shape[1]), np.float32)
+        lg[:n] = logits
+        toks = self._sample_fn(
+            jnp.asarray(lg),
+            jnp.asarray(_pad_to(np.asarray(request_ids, np.int32), nb)),
+            jnp.asarray(_pad_to(np.asarray(positions, np.int32), nb)))
+        return [int(t) for t in np.asarray(toks)[:n]]
 
     def _sample(self, logits: np.ndarray, request_id: int,
                 position: int) -> int:
-        if self.ecfg.temperature <= 0.0:
-            return int(np.argmax(logits))
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(0), request_id), position)
-        lg = jnp.asarray(logits) / self.ecfg.temperature
-        topv, topi = jax.lax.top_k(lg, self.ecfg.top_k)
-        idx = jax.random.categorical(key, topv)
-        return int(topi[idx])
+        return self._sample_batch(logits[None], [request_id], [position])[0]
 
     def _block_params(self, li: int):
         return jax.tree.map(lambda a: a[li], self.params["blocks"])
+
+    # --------------------------------------------------- unified one-forward
+
+    def _forward_step(self, plan: list[tuple[Request, int, int]],
+                      decode: list[Request]):
+        """Pack prompt-chunk rows and decode rows into ONE ragged forward.
+
+        A decode row is a chunk of 1 (its last sampled token) whose paged
+        history is the whole sequence so far — the same
+        fp-queries-over-int4-history contract the prefill kernel already
+        serves, so the union needs no second attention dataflow. The
+        packed layout is bucketed (powers of two) so repeated steps hit
+        the jit cache; padding tokens scatter to out-of-range pages
+        (dropped) and pad rows have qlen 0 (masked)."""
+        rows = list(plan) + [
+            (r, int(self.cache.seq_len[r.seq_slot]), 1) for r in decode]
+        starts = np.asarray([s for _, s, _ in rows])
+        takes = np.asarray([t for _, _, t in rows])
+        slots = np.asarray([r.seq_slot for r, _, _ in rows])
+        nseq, cmax, ttot = len(rows), int(takes.max()), int(takes.sum())
+        cum = np.concatenate([[0], np.cumsum(takes)])
+
+        # ragged layout: packed index → (row, in-chunk offset)
+        tok_seq = np.repeat(np.arange(nseq), takes)
+        tok_off = np.concatenate([np.arange(t) for t in takes])
+        tok_pos = starts[tok_seq] + tok_off            # absolute positions
+        tokens = np.concatenate(
+            [np.asarray(r.prompt[s:s + t]) for r, s, t in plan]
+            + [[r.generated[-1]] for r in decode]).astype(np.int64)
+        pages_np, offs_np = self.cache.token_dests_np(slots[tok_seq], tok_pos)
+
+        # shape buckets — the jit cache key
+        tb = _bucket(ttot, lo=8)
+        nb = _bucket(nseq)
+        cb = _bucket(cmax)
+        npb = min(_bucket(self.cache.pages_needed(max(int(starts.max()), 1))),
+                  self.cache.pcfg.max_pages_per_seq)
+        tables = np.zeros((nb, npb), np.int32)
+        tables[:nseq] = self.cache.block_tables_np(slots, npb)
+
+        pf_tokens = int(sum(t for _, _, t in plan))
+        self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
+                                          pf_tokens)
+        self.forward_calls += 1
+        # all rows history-free (a pure first-chunk step, so no decode
+        # rows either) → the causal fp flash path, exactly like the
+        # split baseline's fast path (its own static trace variant)
+        no_history = int(starts.max()) == 0
+        logits, k_pool, v_pool = self._fwd(
+            cb, no_history, self.params, self.cache.k_pool,
+            self.cache.v_pool,
+            jnp.asarray(_pad_to(tokens, tb)),
+            jnp.asarray(_pad_to(tok_pos, tb)),
+            # padding destinations: page == num_pages is out of range →
+            # the scatter update is dropped; row == nb likewise drops in
+            # the packed→padded scatter
+            jnp.asarray(_pad_to(pages_np, tb,
+                                fill=self.cache.pcfg.num_pages)),
+            jnp.asarray(_pad_to(offs_np, tb)),
+            jnp.asarray(_pad_to(tok_seq, tb, fill=nb)),
+            jnp.asarray(_pad_to(tok_off, tb)),
+            # decode tokens (the packed tail) fake-quantize their
+            # in-flight KV so self-attention matches the int4 the split
+            # decode path reads back
+            jnp.asarray(_pad_to(np.arange(ttot) >= cum[len(plan)], tb)),
+            jnp.asarray(tables),
+            jnp.asarray(_pad_to(starts, nb)),          # ctx per row
+            jnp.asarray(_pad_to(takes, nb)),           # qlens per row
+            jnp.asarray(_pad_to(cum[1:] - 1, nb)))     # last token per row
+        self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
+        logits = np.asarray(logits)
+
+        # host state: prompt progress + decode appends
+        for r, s, t in plan:
+            r.prefill_pos = s + t
+            self.cache.seq_len[r.seq_slot] = r.prefill_pos
+        self.cache.advance([r.seq_slot for r in decode])
+
+        # one vectorized sample over finished-prefill rows ∪ decode rows
+        need = [(si, r, len(r.prompt))
+                for si, (r, s, t) in enumerate(plan)
+                if s + t == len(r.prompt)]
+        need += [(len(plan) + j, r, r.total_len)
+                 for j, r in enumerate(decode)]
+        if not need:
+            return
+        toks = self._sample_batch(
+            logits[[si for si, _, _ in need]],
+            [r.request_id for _, r, _ in need],
+            [p for _, _, p in need])
+        for (_, r, _), tok in zip(need, toks):
+            r.generated.append(int(tok))
+            if not r.first_token_at:    # preserve TTFT across preemptions
+                r.first_token_at = time.time()
+            self.tokens_generated += 1
+
+    def _unified_forward(self, cmax: int, no_history: bool, params,
+                         k_pool, v_pool, tokens, positions, pages, offs,
+                         tseq, toff, dq_mask, block_tables, ctx, qlens,
+                         last_idx):
+        """The jitted unified forward (one trace per shape bucket).
+
+        tokens/positions/pages/offs/tseq/toff/dq_mask: [Tb] int32 packed
+        layout; block_tables: [Nb, NPb]; ctx/qlens/last_idx: [Nb].
+        Returns (logits [Nb, V] f32, k_pool, v_pool) — pools updated
+        with the step's quantized KV."""
+        self.trace_count += 1          # traced body: fires once per compile
+        cfg = self.cfg
+        cache = self.cache
+        nseq = block_tables.shape[0]
+        with self.lm._ctx():
+            x = self.lm._embed(params, tokens[None, :])
+            pos2 = positions[None, :]
+            for li in range(cfg.num_layers):
+                bp = jax.tree.map(lambda a: a[li], params["blocks"])
+                h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
+                q, k, v = ATT._project_qkv(
+                    bp["attn"], cfg, h, h, pos2, pos2)
+                # quantize + page the union's KV (padding rides on OOB
+                # destinations), then attend: fp queries over the int4
+                # history pages + each row's causal in-flight fp chunk
+                kq, vq = cache.quantize_kv(k, v)       # [1, Hkv, Tb, D/2]
+                hkv, half = kq.shape[1], kq.shape[-1]
+                kq = jnp.moveaxis(kq, 1, 2).reshape(-1, hkv, half)
+                vq = jnp.moveaxis(vq, 1, 2).reshape(-1, hkv, half)
+                k_pool = k_pool.at[li, pages, offs].set(kq, mode="drop")
+                v_pool = v_pool.at[li, pages, offs].set(vq, mode="drop")
+                # decode rows' self-attention reads the fake-quantized
+                # chunk — the same values their int4 page dequantizes to
+                kdq, vdq = cache.qdq_kv(k, v)
+                m = (dq_mask != 0)[None, :, None, None]
+                k_att = jnp.where(m, kdq, k.astype(jnp.float32))
+                v_att = jnp.where(m, vdq, v.astype(jnp.float32))
+
+                def pad(a):    # packed [1, Tb, Hx, D] → [Nb, Cb, Hx, D]
+                    z = jnp.zeros((nseq, cmax) + a.shape[2:], a.dtype)
+                    return z.at[tseq, toff].set(a[0], mode="drop")
+
+                if no_history:
+                    # first chunk for every packed prompt: padding keys
+                    # are causally masked, so plain fp flash is exact
+                    out = ATT.flash_attention(pad(q), pad(k_att),
+                                              pad(v_att), causal=True)
+                else:
+                    out = ops.paged_kv4_prefill_attention(
+                        pad(q), pad(k_att), pad(v_att),
+                        k_pool[li], cache.k_scale, cache.k_zero,
+                        v_pool[li], cache.v_scale, cache.v_zero,
+                        block_tables, ctx, qlens, impl=self.quant.impl)
+                a = out[tseq, toff][None]          # repack [1, Tb, ...]
+                a = a.astype(x.dtype).reshape(1, -1, cfg.q_dim)
+                x = x + C.linear(bp["attn"]["wo"], a)
+                h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+                if "moe" in bp:
+                    y, _ = MLP.moe_apply(bp["moe"], h, cfg)
+                else:
+                    y = MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                x = x + y
+            hN = C.apply_norm(params["final_norm"], x[:, last_idx],
+                              cfg.norm, cfg.norm_eps)
+            logits = self.lm._head(params, hN)
+        return logits[0], k_pool, v_pool
+
+    # -------------------------------------------- split-step fig11 baseline
+
+    def _count_trace(self, sig):
+        """Split-path proxy for ``trace_count``: eager dispatch caches
+        per packed shape, so each new signature is a compile."""
+        if sig not in self._fwd_shapes:
+            self._fwd_shapes.add(sig)
+            self.trace_count += 1
 
     def _prefill(self, req: Request):
         """[Benchmark baseline] whole-prompt prefill: one O(T²) fp flash
@@ -227,6 +512,8 @@ class Engine:
         cfg = self.cfg
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
                                           len(req.prompt))
+        self.forward_calls += 1
+        self._count_trace(("whole", len(req.prompt)))
         with self.lm._ctx():
             tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
             x = self.lm._embed(self.params, tokens)
@@ -258,42 +545,9 @@ class Engine:
             req.first_token_at = time.time()
         self.tokens_generated += 1
 
-    # ------------------------------------------------- chunked ragged prefill
-
-    def _prefill_chunked(self) -> bool:
-        """One chunked-prefill step: pack up to ``prefill_chunk_tokens``
-        prompt tokens across ALL partially-prefilled running requests and
-        push them through one ragged forward. Pages are acquired
-        chunk-by-chunk (``grow_to``); a request that can't get pages this
-        step simply waits (decode keeps draining the pool). Returns True
-        if any prefill work ran."""
-        budget = self.ecfg.prefill_chunk_tokens
-        plan: list[tuple[Request, int, int]] = []   # (req, start, take)
-        for req in self.sched.running:
-            if budget <= 0:
-                break
-            rem = len(req.prompt) - req.prefill_pos
-            if rem <= 0:
-                continue
-            want = req.prefill_pos + min(rem, budget)
-            cap = self.cache.grow_to(req.seq_slot, want)
-            take = min(rem, budget, cap - req.prefill_pos)
-            if take <= 0:
-                continue
-            plan.append((req, req.prefill_pos, take))
-            budget -= take
-        if not plan:
-            # no prefill progress possible: if nothing can decode either,
-            # free pages so the next step can move (mid-prefill preemption)
-            stuck = [r for r in self.sched.running if not r.prefilled]
-            if stuck and not any(r.prefilled for r in self.sched.running):
-                self.sched.preempt_one(self.cache)
-            return False
-        self._prefill_forward(plan)
-        return True
-
     def _prefill_forward(self, plan: list[tuple[Request, int, int]]):
-        """Run ONE ragged forward over the planned chunk slices.
+        """[Split baseline] ONE ragged forward over the planned chunk
+        slices (no decode rows — those run in a second forward).
 
         Tokens from all planned requests are packed into a single
         [1, T_total] sequence (cu_seqlens-style offsets) for the
@@ -330,6 +584,8 @@ class Engine:
         no_history = int(starts.max()) == 0
 
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens, ttot)
+        self.forward_calls += 1
+        self._count_trace(("prefill", nseq, cmax, ttot, no_history))
         with self.lm._ctx():
             x = self.lm._embed(self.params,
                                jnp.asarray(tokens, jnp.int32)[None, :])
@@ -385,12 +641,15 @@ class Engine:
         for r, s, t in plan:
             r.prefill_pos = s + t
             self.cache.seq_len[r.seq_slot] = r.prefill_pos
-        for j, (si, r) in enumerate(finished):
-            tok = self._sample(logits[0, j], r.request_id, len(r.prompt))
-            r.generated.append(tok)
-            if not r.first_token_at:    # preserve TTFT across preemptions
-                r.first_token_at = time.time()
-            self.tokens_generated += 1
+        if finished:
+            toks = self._sample_batch(
+                logits[0], [r.request_id for _, r in finished],
+                [len(r.prompt) for _, r in finished])
+            for (_, r), tok in zip(finished, toks):
+                r.generated.append(int(tok))
+                if not r.first_token_at:    # TTFT survives preemptions
+                    r.first_token_at = time.time()
+                self.tokens_generated += 1
 
     def _attend_paged(self, li: int, q, block_tables, lengths):
         """One kernel call for the whole decode batch — block tables in,
@@ -403,17 +662,24 @@ class Engine:
 
     def _attend_gather(self, li: int, q, slots, max_len, lengths):
         """[Benchmark baseline] per-token O(context) gather, then the
-        contiguous KV4 kernel."""
+        contiguous KV4 kernel. The batch-broadcast scale/zero tensors are
+        cached per batch size — they are step-invariant, and rebuilding
+        them allocated four arrays per layer per step."""
         cache = self.cache
-        kp, vp, _ = cache.gather_kv(li, slots, max_len)
         bsz = q.shape[0]
-        bcast = lambda s: jnp.broadcast_to(s[None], (bsz, *s.shape))
+        kp, vp, _ = cache.gather_kv(li, slots, max_len)
+        if bsz not in self._gather_bcast:
+            bcast = lambda s: jnp.broadcast_to(s[None], (bsz, *s.shape))
+            self._gather_bcast[bsz] = (
+                bcast(cache.k_scale), bcast(cache.k_zero),
+                bcast(cache.v_scale), bcast(cache.v_zero))
+        ks, kz, vs, vz = self._gather_bcast[bsz]
         return ops.kv4_decode_attention(
-            q[:, 0], kp, bcast(cache.k_scale), bcast(cache.k_zero),
-            vp, bcast(cache.v_scale), bcast(cache.v_zero),
-            lengths, impl=self.quant.impl)
+            q[:, 0], kp, ks, kz, vp, vs, vz, lengths,
+            impl=self.quant.impl)
 
     def _decode_batch(self, reqs: list[Request]):
+        """[Split baseline] the separate decode forward."""
         cfg = self.cfg
         slots = [r.seq_slot for r in reqs]
         bsz = len(reqs)
@@ -430,6 +696,8 @@ class Engine:
         block_tables = self.cache.block_tables_device(slots, max_len)
         lengths = jnp.asarray(lengths_np + 1, jnp.int32)
         pages, offs = self.cache.token_dests(slots, lengths_np)
+        self.forward_calls += 1
+        self._count_trace(("decode", bsz, self.cache.pages_needed(max_len)))
         with self.lm._ctx():
             x = self.lm._embed(self.params, last)
             positions = jnp.asarray(lengths_np)[:, None]
@@ -457,7 +725,9 @@ class Engine:
                               cfg.norm, cfg.norm_eps)
             logits = np.asarray(self.lm._head(self.params, hN))
         self.cache.advance(slots)
-        for bi, r in enumerate(reqs):
-            tok = self._sample(logits[bi, -1], r.request_id, r.total_len)
-            r.generated.append(tok)
+        toks = self._sample_batch(
+            logits[:, -1], [r.request_id for r in reqs],
+            [r.total_len for r in reqs])
+        for r, tok in zip(reqs, toks):
+            r.generated.append(int(tok))
             self.tokens_generated += 1

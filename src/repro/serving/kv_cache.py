@@ -172,6 +172,21 @@ class PagedKV4Cache:
         return (pack(k, self.k_scale, self.k_zero),
                 pack(v, self.v_scale, self.v_zero))
 
+    def qdq_kv(self, k, v):
+        """Fake-quantize K/V ([B, T, Hkv, D] float) through the pool's
+        int4 codebook → the exact f32 values a reader dequantizes from
+        the pools. The unified forward routes decode rows' in-flight
+        chunk through this so their self-attention sees the same
+        numerics as the split decode path (which reads the just-written
+        int4 page) — greedy argmax then cannot flip on the fp-vs-int4
+        difference of one token."""
+        def roundtrip(x, scale, zero):
+            xt = x.swapaxes(1, 2).astype(jnp.float32)   # [B, Hkv, T, D]
+            n = jnp.clip(jnp.round(xt / scale + zero), 0, 15)
+            return ((n - zero) * scale).swapaxes(1, 2)
+        return (roundtrip(k, self.k_scale, self.k_zero),
+                roundtrip(v, self.v_scale, self.v_zero))
+
     def write_prompt(self, layer_slot: int, seq_id: int, k, v):
         """Write a prompt's packed KV ([1, T, Hkv, D] float) into pages."""
         kp, vp = self.quantize_kv(k, v)                    # [1, Hkv, T, D/2]
@@ -207,11 +222,12 @@ class PagedKV4Cache:
         self.v_pool = self.v_pool.at[layer_slot, page, off].set(
             vp[0, :, 0, :])
 
-    def token_dests(self, seq_ids, positions):
-        """Resolve per-token (physical page, in-page offset) destinations
-        on the host — ONCE per step — so every layer's scatter reuses the
-        same validated device arrays instead of re-reading the block
-        table ``num_layers`` times. → (pages [N] jnp, offs [N] jnp)."""
+    def token_dests_np(self, seq_ids, positions):
+        """Host-side :meth:`token_dests`: validated numpy (pages, offs).
+
+        The unified engine pads these up to its shape bucket (padding
+        tokens get an out-of-range page id whose scatter update is
+        dropped) before shipping them to the device once per step."""
         seq_ids = np.atleast_1d(np.asarray(seq_ids))
         pos = np.atleast_1d(np.asarray(positions))
         ps = self.pcfg.page_size
@@ -220,7 +236,15 @@ class PagedKV4Cache:
             raise IndexError(
                 f"write into unmapped page(s) for seqs "
                 f"{seq_ids[pages_np < 0].tolist()} — grow capacity first")
-        return jnp.asarray(pages_np), jnp.asarray(pos % ps)
+        return pages_np.astype(np.int32), (pos % ps).astype(np.int32)
+
+    def token_dests(self, seq_ids, positions):
+        """Resolve per-token (physical page, in-page offset) destinations
+        on the host — ONCE per step — so every layer's scatter reuses the
+        same validated device arrays instead of re-reading the block
+        table ``num_layers`` times. → (pages [N] jnp, offs [N] jnp)."""
+        pages_np, offs_np = self.token_dests_np(seq_ids, positions)
+        return jnp.asarray(pages_np), jnp.asarray(offs_np)
 
     def scatter_tokens(self, layer_slot: int, pages, offs, k, v):
         """Quantize + scatter N tokens' KV into precomputed destinations.
@@ -254,13 +278,17 @@ class PagedKV4Cache:
 
     # -------------------------------------------------- block-table views
 
+    def block_tables_np(self, seq_ids, npages: int) -> np.ndarray:
+        """[B, npages] int32 host table with unmapped slots (-1) clamped
+        to 0 (masked by length in-kernel, never read semantically)."""
+        tables = self.block_table[np.asarray(seq_ids), :npages]
+        return np.maximum(tables, 0).astype(np.int32)
+
     def block_tables_device(self, seq_ids, max_len: int) -> jax.Array:
         """[B, NP] int32 physical-page table for the paged-attention
-        kernel, sliced to the pages covering ``max_len`` and with
-        unmapped slots (-1) clamped to 0 (masked by length in-kernel)."""
-        npages = self.pages_needed(max_len)
-        tables = self.block_table[np.asarray(seq_ids), :npages]
-        return jnp.asarray(np.maximum(tables, 0), jnp.int32)
+        kernel, sliced to the pages covering ``max_len``."""
+        return jnp.asarray(
+            self.block_tables_np(seq_ids, self.pages_needed(max_len)))
 
     def lengths_device(self, seq_ids) -> jax.Array:
         return jnp.asarray(self.seq_len[np.asarray(seq_ids)], jnp.int32)

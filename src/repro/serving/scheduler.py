@@ -73,6 +73,7 @@ class Scheduler:
         self.finished: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
         self.preemptions = 0
+        self._plan_cursor = 0       # round-robin start for prefill plans
 
     # ----------------------------------------------------------------- queue
 
@@ -124,6 +125,42 @@ class Scheduler:
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def plan_prefill(self, cache,
+                     token_budget: int) -> list[tuple[Request, int, int]]:
+        """Plan this step's prefill chunk: ``[(req, start, take), ...]``.
+
+        Packs up to ``token_budget`` prompt tokens across the running
+        requests that still have prompt left, acquiring pages chunk-by-
+        chunk (``cache.grow_to``); a request that can't get pages this
+        step is simply skipped (decode keeps draining the pool).
+
+        The scan start **round-robins** across the candidates (persistent
+        cursor): a long prompt at the head of ``running`` would otherwise
+        claim the whole budget every step and starve later arrivals of
+        their first token. The engine passes a budget already debited for
+        this step's decode rows, so chunk rows and decode rows share one
+        per-step token budget — the unified forward's shape stays bounded
+        by ``prefill_chunk_tokens`` regardless of the decode batch."""
+        cands = [r for r in self.running if r.prefill_pos < len(r.prompt)]
+        if not cands or token_budget <= 0:
+            return []
+        rot = self._plan_cursor % len(cands)
+        self._plan_cursor += 1
+        budget = token_budget
+        plan: list[tuple[Request, int, int]] = []
+        for req in cands[rot:] + cands[:rot]:
+            if budget <= 0:
+                break
+            rem = len(req.prompt) - req.prefill_pos
+            want = req.prefill_pos + min(rem, budget)
+            cap = cache.grow_to(req.seq_slot, want)
+            take = min(rem, budget, cap - req.prefill_pos)
+            if take <= 0:
+                continue
+            plan.append((req, req.prefill_pos, take))
+            budget -= take
+        return plan
 
     def preempt_one(self, cache) -> Optional[Request]:
         """Evict the youngest running sequence to the waiting queue.

@@ -126,6 +126,10 @@ PREFILL_CASES = [
     (2, 8, 2, 64, 32, [0, 33], [8, 3], 8),        # zero-history + ragged
     (2, 8, 8, 128, 64, [100, 17], [16, 16], 16),  # MHA, len % ps != 0
     (3, 16, 4, 64, 64, [64, 1, 190], [1, 7, 16], 16),  # GQA, len-1 edges
+    # the unified engine's union batch: a decode row (qlen 1, long int4
+    # history), a first-chunk row, a mid-prefill row, and a zero-qlen
+    # bucket-padding row — one kernel call serves all four
+    (4, 8, 2, 64, 32, [150, 0, 33, 64], [1, 8, 3, 0], 8),
 ]
 
 

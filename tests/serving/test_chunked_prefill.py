@@ -56,11 +56,14 @@ def whole_prompt_tokens(setup):
     return toks
 
 
-@pytest.mark.parametrize("chunk", [16, 64, 128])
+@pytest.mark.parametrize(
+    "chunk",
+    [16, 64, pytest.param(128, marks=pytest.mark.slow)])
 def test_chunked_matches_whole_prompt_greedy(setup, whole_prompt_tokens,
                                              chunk):
     """Greedy token-identical across chunk sizes: below / equal / above
-    the longest prompt (the last = single-chunk fp, exact by math)."""
+    the longest prompt (the last = single-chunk fp, exact by math;
+    chunk=64 already hits the single-chunk boundary, so 128 is CI-slow)."""
     cfg, qc, qparams, prompts = setup
     eng = make_engine(cfg, qc, qparams, "chunked", chunk)
     toks = run_engine(eng, prompts)
