@@ -38,8 +38,16 @@ Two parts:
     forwards per step, and compiled forward variants (``trace_count``) —
     the retrace-churn win is measured rather than asserted.
 
-``--smoke`` runs parts (d) and (e) — the CI end-to-end exercise of the
-prefill/decode interleave path and the unified-step dataflow.
+(f) **Prefix cache on vs off**: a stream of requests sharing a long
+    system prompt, cache-off vs the refcounted published-page prefix
+    cache. Asserted via engine COUNTERS, not wall-clock (CI-safe):
+    ``prefix_hit_tokens`` > 0, prefill chunk tokens strictly fewer than
+    cache-off, greedy-token-identical output, and the unified step's
+    one-forward/trace-plateau structure preserved.
+
+``--smoke`` runs parts (d), (e) and (f) — the CI end-to-end exercise of
+the prefill/decode interleave path, the unified-step dataflow, and the
+prefix-cached request lifecycle.
 """
 
 from __future__ import annotations
@@ -295,6 +303,61 @@ def measured_unified_vs_split(verbose=True):
     return results
 
 
+def measured_prefix_cache(verbose=True):
+    """Prefix cache on vs off: one request publishes a 48-token system
+    prompt, then a wave of requests sharing it arrives. Weight-only +
+    calibrated kv_range (the parity regime) keeps greedy output
+    token-identical across arms, so the cache win is pure accounting:
+    hit tokens served from published pages instead of prefill forwards."""
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, cfg.vocab_size, 48).tolist()
+    suffixes = [rng.integers(1, cfg.vocab_size, n).tolist()
+                for n in (5, 9, 7, 12)]
+    results = {}
+    for mode in ("off", "on"):
+        eng = Engine(cfg, qparams, qc, EngineConfig(
+            max_batch=6, num_pages=128, page_size=8, max_pages_per_seq=32,
+            prefill_chunk_tokens=24, kv_range=4.0,
+            prefix_cache=(mode == "on")))
+        t0 = time.time()
+        eng.add_request(0, prefix + suffixes[0], 8)
+        eng.run(max_steps=200)          # publisher completes → pages cached
+        for i, sfx in enumerate(suffixes[1:], start=1):
+            eng.add_request(i, prefix + sfx, 8)
+        eng.run(max_steps=400)
+        dt = time.time() - t0
+        results[mode] = {
+            "tok_s": eng.tokens_generated / dt,
+            "tokens": {r.request_id: list(r.generated)
+                       for r in eng.sched.finished},
+            "prefill_tokens": eng.prefill_tokens,
+            "hit_tokens": eng.prefix_hit_tokens,
+            "steps": eng.steps,
+            "forwards": eng.forward_calls,
+            "traces": eng.trace_count,
+        }
+        if verbose:
+            r = results[mode]
+            print(f"prefix cache {mode:3s}: {r['tok_s']:7.1f} tok/s  "
+                  f"prefill_tokens={r['prefill_tokens']:4d}  "
+                  f"hit_tokens={r['hit_tokens']:3d}  "
+                  f"steps={r['steps']:3d}  forwards={r['forwards']:3d}  "
+                  f"traces={r['traces']}")
+    if verbose:
+        on, off = results["on"], results["off"]
+        total = on["prefill_tokens"] + on["hit_tokens"]
+        print(f"prefix cache: hit rate {on['hit_tokens']/total:.0%}, "
+              f"prefill tokens {on['prefill_tokens']} vs "
+              f"{off['prefill_tokens']} (cache off), "
+              f"greedy-identical={on['tokens'] == off['tokens']}")
+    return results
+
+
 def main(smoke: bool = False):
     t0 = time.time()
     if smoke:
@@ -321,6 +384,23 @@ def main(smoke: bool = False):
         # regression (measured margin is ~2.5×)
         assert u["tok_s"] >= 0.8 * s["tok_s"], (
             "unified step grossly slower than the split baseline")
+        print("== fig11 --smoke: prefix cache on vs off (tiny model, "
+              "CPU) ==")
+        px = measured_prefix_cache()
+        dt = time.time() - t0
+        on, off = px["on"], px["off"]
+        # counters, not wall-clock: cache hits must exist, prefill chunk
+        # tokens must strictly shrink, output must not change, and the
+        # unified one-forward/bucketed-trace structure must survive
+        assert on["hit_tokens"] > 0, "no prefix-cache hits on shared prompts"
+        assert on["prefill_tokens"] < off["prefill_tokens"], (
+            "prefix cache must forward strictly fewer prompt tokens")
+        assert on["tokens"] == off["tokens"], (
+            "prefix cache changed greedy output")
+        assert on["forwards"] == on["steps"], (
+            "prefix cache broke the one-forward-per-step invariant")
+        assert on["traces"] <= off["traces"], (
+            "prefix cache must not add compiled forward variants")
         print(f"fig11_e2e_throughput,{dt*1e6:.0f},"
               f"smoke_chunked_vs_whole_tok_s="
               f"{c['tok_s']/max(w['tok_s'],1e-9):.2f}x;"
@@ -329,7 +409,10 @@ def main(smoke: bool = False):
               f"peak_fp={c['peak_fp_tokens']}vs{w['peak_fp_tokens']}tok;"
               f"unified_vs_split_tok_s="
               f"{u['tok_s']/max(s['tok_s'],1e-9):.2f}x;"
-              f"traces={u['traces']}vs{s['traces']}")
+              f"traces={u['traces']}vs{s['traces']};"
+              f"prefix_hit_tokens={on['hit_tokens']};"
+              f"prefill_tokens_on_off="
+              f"{on['prefill_tokens']}vs{off['prefill_tokens']}")
         return
     print("\n== Fig. 11 proxy: derived e2e throughput vs W4A16 "
           "(80 GB budget) ==")
@@ -346,6 +429,8 @@ def main(smoke: bool = False):
     prefill = measured_prefill_modes()
     print("\n== measured step structure: unified vs split (tiny model) ==")
     step = measured_unified_vs_split()
+    print("\n== measured prefix cache: on vs off (tiny model) ==")
+    px = measured_prefix_cache()
     dt = time.time() - t0
     mean_long = float(np.mean([r["W4AxKV4"] for r in rel_long.values()]))
     mean_short = float(np.mean([r["W4AxKV4"] for r in rel_short.values()]))
@@ -360,12 +445,15 @@ def main(smoke: bool = False):
           f"chunked_vs_whole_prefill="
           f"{prefill['chunked']['tok_s']/max(prefill['whole']['tok_s'],1e-9):.2f}x;"
           f"unified_vs_split="
-          f"{step['unified']['tok_s']/max(step['split']['tok_s'],1e-9):.2f}x")
+          f"{step['unified']['tok_s']/max(step['split']['tok_s'],1e-9):.2f}x;"
+          f"prefix_cache_prefill_tokens="
+          f"{px['on']['prefill_tokens']}vs{px['off']['prefill_tokens']}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI: only the engine runs — chunked-vs-whole "
-                         "prefill (d) and unified-vs-split step (e)")
+                         "prefill (d), unified-vs-split step (e), and "
+                         "prefix cache on-vs-off (f)")
     main(smoke=ap.parse_args().smoke)

@@ -1,6 +1,8 @@
-"""End-to-end driver: serve a small model with batched requests through
-the full COMET stack — FMPQ quantization, paged int4 KV cache,
-continuous batching with admission control and preemption.
+"""End-to-end driver for the request-lifecycle serving API: submit
+requests with per-request SamplingParams through the full COMET stack
+(FMPQ quantization, refcounted paged int4 KV cache with prefix reuse,
+continuous batching), stream tokens as they are sampled, abort one
+request mid-flight, and crash/restore from a snapshot.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,7 +13,7 @@ import numpy as np
 
 from repro.configs.base import get_smoke_config
 from repro.models.lm import LM, QuantConfig
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, SamplingParams
 
 cfg = get_smoke_config("llama3_8b")
 quant = QuantConfig(int4_fraction=0.875, impl="ref")
@@ -21,26 +23,53 @@ qparams, _ = LM(cfg, quant=quant).quantize(params, axes)
 engine = Engine(cfg, qparams, quant, EngineConfig(
     max_batch=8, num_pages=128, page_size=16))
 
+# a shared system prompt: after the first request publishes its pages,
+# later arrivals reuse them (watch prefix_hit_tokens in the summary)
 rng = np.random.default_rng(0)
-n_requests, max_new = 12, 12
-for i in range(n_requests):
-    plen = int(rng.integers(4, 24))
-    engine.add_request(i, rng.integers(0, cfg.vocab_size, plen).tolist(),
-                       max_new)
+system_prompt = rng.integers(0, cfg.vocab_size, 32).tolist()
 
+# stream the first request token-by-token (stream() drives step())
+h0 = engine.submit(
+    system_prompt + rng.integers(0, cfg.vocab_size, 5).tolist(),
+    SamplingParams(max_new_tokens=12))
+print("streaming request 0:", end="", flush=True)
+for ev in engine.stream(h0):
+    if ev.token is not None:
+        print(f" {ev.token}", end="", flush=True)
+print(f"  [{engine.result(h0).state.value}]")
+
+# a batch of followers sharing the (now published) system prompt, one
+# of them sampled at temperature, one aborted mid-decode
 t0 = time.time()
-finished = engine.run()
+handles = [engine.submit(
+    system_prompt + rng.integers(0, cfg.vocab_size, int(n)).tolist(),
+    SamplingParams(max_new_tokens=12,
+                   temperature=0.8 if i == 2 else 0.0, top_k=8))
+    for i, n in enumerate(rng.integers(4, 16, 5))]
+victim = handles[3]
+while engine.sched.has_work:
+    engine.step()
+    for ev in engine.events():
+        if ev.request_id == victim.request_id and ev.num_generated >= 3:
+            engine.abort(victim)
 dt = time.time() - t0
+
+finished = engine.sched.finished
 tokens = sum(len(r.generated) for r in finished)
+hit = engine.prefix_hit_tokens
+total = hit + engine.prefill_tokens
 print(f"{len(finished)} requests, {tokens} tokens in {dt:.1f}s "
       f"→ {tokens/dt:.1f} tok/s "
-      f"(engine steps={engine.steps}, forwards={engine.forward_calls}, "
-      f"traces={engine.trace_count}, preemptions={engine.sched.preemptions})")
-for r in sorted(finished, key=lambda r: r.request_id)[:5]:
-    print(f"  req {r.request_id:2d}: {r.generated}")
+      f"(steps={engine.steps}, forwards={engine.forward_calls}, "
+      f"prefix hit rate {hit}/{total} prompt tokens, "
+      f"aborted={engine.aborted_count})")
+for r in sorted(finished, key=lambda r: r.request_id):
+    print(f"  req {r.request_id:2d} [{r.state.value:9s}]: {r.generated}")
+assert engine.result(victim).state.value == "aborted"
+assert engine.cache.pages_free == 128      # abort/finish freed every page
 
 # fault tolerance: snapshot → "crash" → restore → keep serving
-engine.add_request(100, [1, 2, 3], 4)
+engine.submit([1, 2, 3], SamplingParams(max_new_tokens=4), request_id=100)
 blob = engine.snapshot()
 engine2 = Engine.restore(blob, cfg, qparams, quant, EngineConfig(
     max_batch=8, num_pages=128, page_size=16))

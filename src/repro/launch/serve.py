@@ -1,9 +1,18 @@
 """Serving launcher: quantize a model offline (FMPQ W4AxKV4) and run the
-continuous-batching engine over a synthetic request trace.
+request-lifecycle engine over a synthetic request trace.
+
+Requests go through ``Engine.submit`` with per-request
+:class:`SamplingParams`; ``--stream`` prints tokens as ``step()`` emits
+them (the ``engine.events()`` queue); ``--prefix-cache`` toggles
+refcounted shared-prompt page reuse (``--shared-prefix`` controls how
+many prompt tokens the synthetic trace shares); ``--abort-every N``
+cancels every Nth request mid-flight to exercise the abort path. The
+end-of-run summary reports throughput, prefix-cache hit rate, and
+aborted counts.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
-      --requests 16 --max-new 32
+      --requests 16 --max-new 32 --stream --prefix-cache on
 """
 
 from __future__ import annotations
@@ -16,7 +25,7 @@ import numpy as np
 
 from repro.configs.base import get_config, get_smoke_config
 from repro.models.lm import LM, QuantConfig
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, SamplingParams
 
 
 def main():
@@ -32,7 +41,10 @@ def main():
     ap.add_argument("--int4-fraction", type=float, default=0.875)
     ap.add_argument("--schedule", default="split", choices=["split", "mixed"])
     ap.add_argument("--impl", default="ref", choices=["auto", "pallas", "ref"])
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request SamplingParams.temperature (0=greedy)")
+    ap.add_argument("--top-k", type=int, default=40,
+                    help="per-request SamplingParams.top_k")
     ap.add_argument("--prefill-mode", default="chunked",
                     choices=["chunked", "whole"])
     ap.add_argument("--prefill-chunk", type=int, default=64,
@@ -42,6 +54,22 @@ def main():
                     help="unified: ONE forward/step over decode rows + "
                          "prompt chunks (bucketed shapes); split: "
                          "separate prefill + decode forwards (baseline)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="refcounted shared-prompt page reuse")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prompt tokens shared by every request (a "
+                         "synthetic system prompt — the prefix-cache "
+                         "workload)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted")
+    ap.add_argument("--abort-every", type=int, default=0,
+                    help="abort every Nth request after its first token "
+                         "(0 = never) — exercises the abort path")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="submit one request every N engine steps "
+                         "(0 = all up front). Staggered arrivals let "
+                         "later requests hit the prefix published by "
+                         "earlier ones")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -62,25 +90,69 @@ def main():
         page_size=args.page_size, temperature=args.temperature,
         prefill_mode=args.prefill_mode,
         prefill_chunk_tokens=args.prefill_chunk,
-        unified_step=(args.step_mode == "unified")))
+        unified_step=(args.step_mode == "unified"),
+        prefix_cache=(args.prefix_cache == "on")))
 
     rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=args.shared_prefix).tolist()
+    if 0 < args.shared_prefix < args.page_size:
+        print(f"[warn] --shared-prefix {args.shared_prefix} < --page-size "
+              f"{args.page_size}: prefix matching is full-page-granular, "
+              "so the shared prefix can never hit — shrink --page-size or "
+              "grow the prefix", flush=True)
+    sp = SamplingParams(max_new_tokens=args.max_new,
+                        temperature=args.temperature, top_k=args.top_k)
+    prompts = []
+    for _ in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
-        prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
-        eng.add_request(i, prompt, args.max_new)
+        prompts.append(shared
+                       + rng.integers(0, cfg.vocab_size, size=plen).tolist())
+    # arrival trace: request i is submitted at step i*arrival_every
+    pending = [(i * args.arrival_every, p) for i, p in enumerate(prompts)]
+    abort_ids: set = set()
+    submitted = 0
 
     t0 = time.time()
-    finished = eng.run()
+    while (pending or eng.sched.has_work) and eng.steps < 10_000:
+        while pending and pending[0][0] <= eng.steps:
+            _, prompt = pending.pop(0)
+            h = eng.submit(prompt, sp)
+            submitted += 1
+            if args.abort_every and submitted % args.abort_every == 0:
+                abort_ids.add(h.request_id)
+        eng.step()
+        for ev in eng.events():
+            if ev.token is not None and ev.request_id in abort_ids:
+                eng.abort(ev.request_id)       # cancel after first token
+                abort_ids.discard(ev.request_id)
+            if args.stream:
+                if ev.token is not None:
+                    print(f"  [stream] req {ev.request_id} "
+                          f"+tok {ev.token} (#{ev.num_generated})",
+                          flush=True)
+                elif ev.finished:
+                    print(f"  [stream] req {ev.request_id} "
+                          f"{ev.state.value}"
+                          + (f" ({ev.stop_reason})" if ev.stop_reason
+                             else ""), flush=True)
     dt = time.time() - t0
+
+    finished = eng.sched.finished
     total_tokens = sum(len(r.generated) for r in finished)
+    prompt_tokens = eng.prefill_tokens + eng.prefix_hit_tokens
+    hit_rate = eng.prefix_hit_tokens / prompt_tokens if prompt_tokens else 0.0
     print(f"[done] {len(finished)} requests, {total_tokens} tokens in "
           f"{dt:.1f}s → {total_tokens/dt:.1f} tok/s "
           f"(steps={eng.steps}, forwards={eng.forward_calls}, "
           f"traces={eng.trace_count}, preemptions={eng.sched.preemptions})",
           flush=True)
+    print(f"[cache] prefix hit rate {hit_rate:.0%} "
+          f"({eng.prefix_hit_tokens}/{prompt_tokens} prompt tokens served "
+          f"from published pages); aborted={eng.aborted_count}", flush=True)
     for r in finished[:4]:
-        print(f"  req {r.request_id}: {r.generated[:12]}…", flush=True)
+        print(f"  req {r.request_id}: {r.state.value:9s} "
+              f"{r.generated[:12]}…", flush=True)
 
 
 if __name__ == "__main__":

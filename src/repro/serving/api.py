@@ -1,0 +1,116 @@
+"""Request-lifecycle serving API: the engine's stable public surface.
+
+The engine used to be batch-offline: ``add_request(...)`` then
+``run() -> list[Request]``. Production serving needs a *request
+lifecycle* — submit a prompt with its own sampling parameters, stream
+tokens as they are sampled, cancel mid-flight, observe completion —
+which is what vLLM-style continuous-batching engines (and QServe's
+serving stack, COMET's measured baseline) expose. This module holds the
+value types of that surface; the verbs live on ``Engine``:
+
+* ``Engine.submit(prompt, params) -> RequestHandle`` — enqueue a request
+  with per-request :class:`SamplingParams`.
+* ``Engine.stream(handle)`` — generator of :class:`RequestOutput`
+  events for one request, driving ``step()`` as needed; or pass
+  ``on_event=`` to ``submit`` for push-style per-token callbacks.
+* ``Engine.events()`` — drain the engine-wide event queue fed by
+  ``step()`` (one event per sampled token, plus a terminal event per
+  request).
+* ``Engine.abort(handle)`` — cancel at ANY lifecycle state; pages are
+  released refcount-exactly (``pages_free`` returns to baseline).
+* ``Engine.run()`` — thin batch compatibility wrapper over the above.
+
+Lifecycle (``RequestState``)::
+
+    QUEUED → PREFILLING → DECODING → FINISHED(stop_reason)
+       └──────────┴───────────┴────→ ABORTED        (abort() anywhere)
+
+Preemption moves a running request back to QUEUED (its pages are
+dropped; re-admission re-prefills — with the prefix cache warm, its own
+already-published prompt pages are a hit and only the tail re-forwards).
+
+Event contract: every sampled token is emitted exactly once, in
+generation order, so the concatenation of a request's token events
+always equals its final output (``tests/serving/test_api.py`` pins
+this, including across preemptions, where earlier tokens are folded
+into the re-queued prompt).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Optional
+
+__all__ = ["SamplingParams", "RequestState", "RequestOutput",
+           "RequestHandle"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    max_new_tokens: generation budget (the request FINISHES with
+        ``stop_reason=None`` when it is spent).
+    temperature: 0 → greedy argmax; > 0 → top-k categorical sampling at
+        this temperature. Sampling is keyed by (request_id, position),
+        so a request's stochastic text is reproducible across runs and
+        across engine restarts.
+    top_k: candidate pool for temperature sampling (ignored when
+        greedy). Per-row: one batched sampler call serves a batch that
+        mixes greedy and stochastic requests with different k.
+    """
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 40
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 1:
+            raise ValueError("top_k must be >= 1")
+
+
+class RequestState(str, enum.Enum):
+    """Request lifecycle. String-valued so snapshots/logs stay readable."""
+
+    QUEUED = "queued"            # submitted, waiting for admission
+    PREFILLING = "prefilling"    # admitted, prompt streaming through chunks
+    DECODING = "decoding"        # prompt resident, generating tokens
+    FINISHED = "finished"        # completed (stop_reason says why)
+    ABORTED = "aborted"          # cancelled via Engine.abort()
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.FINISHED, RequestState.ABORTED)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """One streamed event. ``token is not None`` → a newly sampled token
+    (exactly one event per token, in order); ``finished`` → the terminal
+    event (state FINISHED or ABORTED, ``stop_reason`` set for caps/
+    aborts, ``None`` for a clean max_new_tokens completion)."""
+
+    request_id: int
+    state: RequestState
+    token: Optional[int] = None
+    num_generated: int = 0       # tokens generated this incarnation
+    stop_reason: Optional[str] = None
+    finished: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestHandle:
+    """Opaque ticket returned by ``Engine.submit``; pass it to
+    ``Engine.stream`` / ``Engine.abort`` / ``Engine.result``."""
+
+    request_id: int
+    prompt_len: int = 0
+
+
+# Per-token callback signature for Engine.submit(on_event=...).
+EventCallback = Callable[[RequestOutput], None]

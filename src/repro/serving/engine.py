@@ -1,10 +1,35 @@
-"""COMET serving engine: continuous batching over the paged KV4 cache.
+"""COMET serving engine: request-lifecycle API over continuous batching
+on the paged KV4 cache.
 
 The engine is the paper's §5 system layer: W4Ax projections + int4 paged
 KV + vLLM-style scheduling. Unlike the scanned `LM.decode` (used for the
 compile-time dry-run), the engine walks layers in a Python loop so each
 layer's attention reads/writes the *paged* pool directly — the realistic
 serving dataflow.
+
+**Public surface (the request lifecycle — see serving/api.py).**
+``submit(prompt, params) -> RequestHandle`` enqueues a request with
+per-request :class:`SamplingParams`; ``step()`` advances every in-flight
+request one scheduling quantum and emits :class:`RequestOutput` events
+(one per sampled token, plus a terminal event); ``events()`` drains the
+engine-wide event queue, ``stream(handle)`` yields one request's events
+as they happen (driving ``step()`` internally), and ``submit(...,
+on_event=...)`` delivers push-style callbacks. ``abort(handle)`` cancels
+at any state — QUEUED, PREFILLING, or DECODING — releasing pages
+refcount-exactly. The legacy batch API (``add_request`` + ``run``) is a
+thin compatibility wrapper over this lifecycle.
+
+**Prefix caching.** Full prompt pages are published into the cache's
+chained-hash prefix index when a request's prefill completes; admission
+matches each waiting prompt against the index (`PagedKV4Cache.
+match_prefix`), adopts the shared pages refcounted, charges only the
+un-cached suffix against the pool, and starts ``prefill_pos`` at the end
+of the matched prefix — N requests sharing a system prompt forward its
+KV once. Pages with refcount 0 stay cached on a reclaimable LRU and are
+evicted before any preemption fires. Counters: ``prefix_hit_tokens``
+(prompt tokens served from cache) and ``prefill_tokens`` (prompt tokens
+actually forwarded). Enabled by ``EngineConfig.prefix_cache`` (chunked
+prefill only; the whole-prompt baseline always recomputes).
 
 **Unified step (the default).** Each step issues exactly ONE forward per
 layer: decode tokens (a chunk of 1 with paged int4 history) and prompt
@@ -76,10 +101,13 @@ from repro.layers import attention as ATT
 from repro.layers import common as C
 from repro.layers import mlp as MLP
 from repro.models.lm import LM, QuantConfig
+from repro.serving.api import (RequestHandle, RequestOutput, RequestState,
+                               SamplingParams)
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "EngineConfig"]
+__all__ = ["Engine", "EngineConfig", "SamplingParams", "RequestState",
+           "RequestOutput", "RequestHandle"]
 
 
 def _bucket(n: int, lo: int = 1) -> int:
@@ -107,6 +135,8 @@ class EngineConfig:
     kv_range: float = 16.0           # calibrated |k|,|v| range → int4 scales
     unified_step: bool = True        # ONE forward/step (decode ∪ prefill);
     #                                  False → split-step fig11 baseline
+    prefix_cache: bool = True        # publish/reuse shared prompt pages
+    #                                  (refcounted; chunked prefill only)
 
     def __post_init__(self):
         if self.decode_attention not in ("paged", "gather"):
@@ -126,6 +156,12 @@ class EngineConfig:
         kernel; the whole-prompt / gather baselines imply a split step."""
         return (self.unified_step and self.prefill_mode == "chunked"
                 and self.decode_attention == "paged")
+
+    @property
+    def prefix_caching(self) -> bool:
+        """Prefix reuse rides on ``prefill_pos`` chunk streaming — the
+        whole-prompt baseline always forwards the full prompt."""
+        return self.prefix_cache and self.prefill_mode == "chunked"
 
 
 class Engine:
@@ -162,20 +198,120 @@ class Engine:
         self.interleaved_steps = 0
         self.forward_calls = 0
         self.trace_count = 0
+        # prefix-cache + lifecycle counters: prompt tokens served from
+        # published pages vs actually forwarded, and aborted requests
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0
+        self.aborted_count = 0
         self._fwd_shapes: set = set()
         self._gather_bcast: dict = {}      # bsz → broadcast scales/zeros
-        self._fwd = jax.jit(self._unified_forward, static_argnums=(0, 1))
-        self._sample_fn = None             # lazily jitted batched sampler
+        # donate the pool buffers so the traced KV scatter updates them
+        # in place instead of copying ~num_pages of int4 every step; CPU
+        # has no buffer donation (XLA warns and copies), so gate it to
+        # the accelerator backends where it is honored
+        self.donate_pools = jax.default_backend() in ("tpu", "gpu")
+        self._fwd = jax.jit(
+            self._unified_forward, static_argnums=(0, 1),
+            donate_argnums=(3, 4) if self.donate_pools else ())
+        self._sample_fns: dict = {}        # kmax → jitted batched sampler
+        self._by_id: dict[int, Request] = {}
+        self._next_id = 0
+        self._events: list[RequestOutput] = []
 
-    # ------------------------------------------------------------------ API
+    # ----------------------------------------------------- lifecycle API
+
+    def submit(self, prompt: list[int],
+               params: Optional[SamplingParams] = None,
+               request_id: Optional[int] = None,
+               on_event=None) -> RequestHandle:
+        """Enqueue a request (state QUEUED) and return its handle.
+
+        ``params`` defaults to the engine-wide sampling configuration;
+        ``on_event`` is an optional push callback invoked with every
+        :class:`RequestOutput` the request emits."""
+        if params is None:
+            params = SamplingParams(temperature=self.ecfg.temperature,
+                                    top_k=self.ecfg.top_k)
+        if request_id is None:
+            while self._next_id in self._by_id:
+                self._next_id += 1
+            request_id = self._next_id
+        old = self._by_id.get(request_id)
+        if old is not None and not old.state.terminal:
+            raise ValueError(f"request_id {request_id} already in flight")
+        req = Request(
+            request_id=request_id, prompt=list(prompt),
+            max_new_tokens=params.max_new_tokens, arrived_at=time.time(),
+            params=params, on_event=on_event)
+        self._by_id[request_id] = req
+        self.sched.submit(req)
+        return RequestHandle(request_id=request_id, prompt_len=len(prompt))
+
+    def _resolve(self, handle) -> Optional[Request]:
+        rid = handle.request_id if isinstance(handle, RequestHandle) \
+            else int(handle)
+        return self._by_id.get(rid)
+
+    def abort(self, handle) -> bool:
+        """Cancel a request at ANY lifecycle state. Pages are released
+        refcount-exactly (``cache.pages_free`` returns to its
+        pre-submit baseline; shared prefix pages stay cached for their
+        other owners). Emits a terminal ABORTED event. Returns False if
+        the request is unknown or already terminal."""
+        req = self._resolve(handle)
+        if req is None or not self.sched.abort(req, self.cache):
+            return False
+        self.aborted_count += 1
+        self._emit(req)
+        return True
+
+    def events(self) -> list[RequestOutput]:
+        """Drain the engine-wide event queue fed by ``step()``: one
+        event per sampled token (in order) plus a terminal event per
+        finished/aborted request. A long-running server must drain this
+        (or consume via ``stream``/``on_event`` and ignore it) — the
+        queue is unbounded by design so the batch ``run()`` wrapper
+        loses nothing. Terminal request state itself is retained for
+        the engine's lifetime (same policy as ``sched.finished``)."""
+        evs, self._events = self._events, []
+        return evs
+
+    def stream(self, handle):
+        """Yield one request's :class:`RequestOutput` events as they
+        happen, driving ``step()`` while the request is in flight (other
+        requests keep batching through the same steps). Terminates after
+        the request's terminal event."""
+        req = self._resolve(handle)
+        if req is None:
+            return
+        cursor = 0
+        while True:
+            while cursor < len(req.events):
+                yield req.events[cursor]
+                cursor += 1
+            if req.state.terminal or not self.sched.has_work:
+                return
+            self.step()
+
+    def result(self, handle) -> Optional[Request]:
+        """The request's current state (its final state once terminal)."""
+        return self._resolve(handle)
+
+    # ----------------------------------------------------- batch-compat API
 
     def add_request(self, request_id: int, prompt: list[int],
                     max_new_tokens: int):
-        self.sched.submit(Request(
-            request_id=request_id, prompt=list(prompt),
-            max_new_tokens=max_new_tokens, arrived_at=time.time()))
+        """[Compat] the pre-lifecycle batch API: submit with engine-wide
+        sampling defaults and an explicit id."""
+        self.submit(prompt,
+                    SamplingParams(max_new_tokens=max_new_tokens,
+                                   temperature=self.ecfg.temperature,
+                                   top_k=self.ecfg.top_k),
+                    request_id=request_id)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
+        """[Compat] drive ``step()`` until all work drains; the offline
+        batch wrapper over the streaming lifecycle."""
         while self.sched.has_work and self.steps < max_steps:
             self.step()
         return self.sched.finished
@@ -189,17 +325,59 @@ class Engine:
         eng = cls(cfg, qparams, quant, ecfg)
         eng.sched = Scheduler.restore(blob, ecfg.max_batch,
                                       ecfg.max_batch * 2)
+        eng._by_id = {r.request_id: r for r in
+                      list(eng.sched.waiting) + eng.sched.finished}
         return eng
+
+    # ----------------------------------------------------------- events
+
+    def _emit(self, req: Request, token: Optional[int] = None):
+        out = RequestOutput(
+            request_id=req.request_id, state=req.state, token=token,
+            num_generated=len(req.generated), stop_reason=req.stop_reason,
+            finished=req.state.terminal)
+        self._events.append(out)
+        req.events.append(out)
+        if req.on_event is not None:
+            req.on_event(out)
+
+    def _record_token(self, req: Request, tok: int):
+        """Single choke point for a sampled token: append, stamp TTFT,
+        flip PREFILLING→DECODING, and emit the streaming event."""
+        if req.state.terminal:
+            # reentrant abort: an on_event callback cancelled this
+            # request earlier in the same step's sampling loop — its
+            # terminal event must stay last, so drop the token
+            return
+        req.generated.append(int(tok))
+        if not req.first_token_at:      # preserve TTFT across preemptions
+            req.first_token_at = time.time()
+        if req.state == RequestState.PREFILLING:
+            req.state = RequestState.DECODING
+        self.tokens_generated += 1
+        self._emit(req, token=int(tok))
+
+    def _complete(self, req: Request):
+        self.sched.complete(req, self.cache)
+        self._emit(req)
 
     # ----------------------------------------------------------------- step
 
     def step(self):
         self.steps += 1
         chunked = self.ecfg.prefill_mode == "chunked"
+        nfin = len(self.sched.finished)
         admitted = self.sched.admit(
             self.cache,
             first_chunk_tokens=(self.ecfg.prefill_chunk_tokens if chunked
-                                else None))
+                                else None),
+            prefix_cache=self.ecfg.prefix_caching)
+        # admission-time rejections (prompt_too_long) reach finished
+        # without passing through _complete — they still owe their
+        # terminal event
+        for r in self.sched.finished[nfin:]:
+            self._emit(r)
+        self.prefix_hit_tokens += sum(r.cached_tokens for r in admitted)
         # chunk rows and decode rows share one token budget: the decode
         # batch debits the prefill plan so the forward stays bounded by
         # ~prefill_chunk_tokens (min 1 keeps long prompts progressing)
@@ -212,7 +390,7 @@ class Engine:
             self._step_split(admitted, chunked, budget)
         for req in list(self.sched.running):
             if req.done:
-                self.sched.complete(req, self.cache)
+                self._complete(req)
 
     def _step_unified(self, budget: int):
         """ONE forward for the union of decode rows and prompt chunks.
@@ -271,6 +449,12 @@ class Engine:
         ready: list[Request] = []
         while pending:
             r = pending.pop(0)
+            if r.seq_slot < 0 or r.state.terminal:
+                # a length_cap _complete below emits an event whose
+                # on_event callback may reentrantly abort() a request
+                # still sitting in these local lists — its slot is gone,
+                # so it must not reach extend_seq or the forward
+                continue
             if self.cache.extend_seq(r.seq_slot):
                 ready.append(r)
                 continue
@@ -280,7 +464,7 @@ class Engine:
                 # in this loop could victimize it and destroy its output,
                 # and freeing its pages helps the still-pending sequences
                 r.stop_reason = "length_cap"
-                self.sched.complete(r, self.cache)
+                self._complete(r)
                 continue
             victim = self.sched.preempt_one(self.cache)
             if victim is None:
@@ -291,46 +475,70 @@ class Engine:
                 ready.remove(victim)
             if victim is not r:
                 pending.insert(0, r)    # retry r with the freed pages
-        return ready
+        # drop rows a reentrant abort invalidated after they were ready
+        return [r for r in ready if r.seq_slot >= 0 and not r.state.terminal]
 
     # ------------------------------------------------------------- sampling
 
-    def _make_sample_fn(self):
-        temp, top_k = self.ecfg.temperature, self.ecfg.top_k
+    def _make_sample_fn(self, kmax: int):
+        """Batched per-request sampler: one call serves rows mixing
+        greedy and stochastic requests with different temperature/top_k.
+        ``kmax`` (the bucketed max top_k this batch) is the only static
+        shape — per-row k is a mask over the top-kmax candidates."""
 
-        def sample(logits, rids, positions):
+        def sample(logits, rids, positions, temps, topks):
             key0 = jax.random.PRNGKey(0)
             keys = jax.vmap(lambda r, p: jax.random.fold_in(
                 jax.random.fold_in(key0, r), p))(rids, positions)
-            topv, topi = jax.lax.top_k(logits / temp, top_k)
-            idx = jax.vmap(jax.random.categorical)(keys, topv)
-            return jnp.take_along_axis(topi, idx[:, None], axis=1)[:, 0]
+            topv, topi = jax.lax.top_k(logits, kmax)
+            safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+            masked = jnp.where(jnp.arange(kmax)[None, :] < topks[:, None],
+                               topv / safe_t, -jnp.inf)
+            idx = jax.vmap(jax.random.categorical)(keys, masked)
+            samp = jnp.take_along_axis(topi, idx[:, None], axis=1)[:, 0]
+            greedy = jnp.argmax(logits, axis=-1).astype(samp.dtype)
+            return jnp.where(temps > 0, samp, greedy)
 
         return jax.jit(sample)
 
-    def _sample_batch(self, logits: np.ndarray, request_ids: list[int],
+    def _sample_batch(self, logits: np.ndarray, reqs: list[Request],
                       positions: list[int]) -> list[int]:
         """ONE vectorized sampling call for all rows needing a token
-        this step (was: a per-request Python loop of top_k/categorical
-        calls, each a fresh trace). Rows are padded up to a power-of-two
-        bucket so steady-state steps reuse the compiled sampler."""
+        this step, honoring each request's own SamplingParams. Rows are
+        padded up to a power-of-two bucket so steady-state steps reuse
+        the compiled sampler; all-greedy batches (the common serving
+        default) take a pure-numpy argmax fast path."""
         n = logits.shape[0]
-        if self.ecfg.temperature <= 0.0:
+        dflt = self.ecfg
+        temps = np.asarray(
+            [r.params.temperature if r.params else dflt.temperature
+             for r in reqs], np.float32)
+        if (temps <= 0.0).all():
             return [int(t) for t in np.argmax(logits, axis=-1)]
-        if self._sample_fn is None:
-            self._sample_fn = self._make_sample_fn()
+        topks = np.asarray(
+            [min(r.params.top_k if r.params else dflt.top_k,
+                 logits.shape[1]) for r in reqs], np.int32)
+        kmax = min(_bucket(int(topks.max())), logits.shape[1])
+        fn = self._sample_fns.get(kmax)
+        if fn is None:
+            fn = self._sample_fns[kmax] = self._make_sample_fn(kmax)
         nb = _bucket(n)
         lg = np.zeros((nb, logits.shape[1]), np.float32)
         lg[:n] = logits
-        toks = self._sample_fn(
+        tp = np.zeros((nb,), np.float32)       # pad rows sample greedily
+        tp[:n] = temps
+        rids = np.asarray([r.request_id for r in reqs], np.int32)
+        toks = fn(
             jnp.asarray(lg),
-            jnp.asarray(_pad_to(np.asarray(request_ids, np.int32), nb)),
-            jnp.asarray(_pad_to(np.asarray(positions, np.int32), nb)))
+            jnp.asarray(_pad_to(rids, nb)),
+            jnp.asarray(_pad_to(np.asarray(positions, np.int32), nb)),
+            jnp.asarray(tp),
+            jnp.asarray(_pad_to(topks, nb, fill=1)))
         return [int(t) for t in np.asarray(toks)[:n]]
 
-    def _sample(self, logits: np.ndarray, request_id: int,
+    def _sample(self, logits: np.ndarray, req: Request,
                 position: int) -> int:
-        return self._sample_batch(logits[None], [request_id], [position])[0]
+        return self._sample_batch(logits[None], [req], [position])[0]
 
     def _block_params(self, li: int):
         return jax.tree.map(lambda a: a[li], self.params["blocks"])
@@ -377,6 +585,7 @@ class Engine:
         pf_tokens = int(sum(t for _, _, t in plan))
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
                                           pf_tokens)
+        self.prefill_tokens += pf_tokens
         self.forward_calls += 1
         # all rows history-free (a pure first-chunk step, so no decode
         # rows either) → the causal fp flash path, exactly like the
@@ -406,10 +615,13 @@ class Engine:
         self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
         logits = np.asarray(logits)
 
-        # host state: prompt progress + decode appends
+        # host state: prompt progress + decode appends; a completed
+        # prompt publishes its full pages into the prefix index
         for r, s, t in plan:
             r.prefill_pos = s + t
             self.cache.seq_len[r.seq_slot] = r.prefill_pos
+            if self.ecfg.prefix_caching and r.prefill_pos == len(r.prompt):
+                self.cache.publish_prefix(r.seq_slot, r.prompt)
         self.cache.advance([r.seq_slot for r in decode])
 
         # one vectorized sample over finished-prefill rows ∪ decode rows
@@ -422,13 +634,10 @@ class Engine:
             return
         toks = self._sample_batch(
             logits[[si for si, _, _ in need]],
-            [r.request_id for _, r, _ in need],
+            [r for _, r, _ in need],
             [p for _, _, p in need])
         for (_, r, _), tok in zip(need, toks):
-            r.generated.append(int(tok))
-            if not r.first_token_at:    # preserve TTFT across preemptions
-                r.first_token_at = time.time()
-            self.tokens_generated += 1
+            self._record_token(r, tok)
 
     def _unified_forward(self, cmax: int, no_history: bool, params,
                          k_pool, v_pool, tokens, positions, pages, offs,
@@ -512,6 +721,7 @@ class Engine:
         cfg = self.cfg
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
                                           len(req.prompt))
+        self.prefill_tokens += len(req.prompt)
         self.forward_calls += 1
         self._count_trace(("whole", len(req.prompt)))
         with self.lm._ctx():
@@ -536,14 +746,11 @@ class Engine:
             hN = C.apply_norm(self.params["final_norm"], x[:, -1:],
                               cfg.norm, cfg.norm_eps)
             logits = self.lm._head(self.params, hN)
-        tok = self._sample(np.asarray(logits[0, -1]), req.request_id,
+        tok = self._sample(np.asarray(logits[0, -1]), req,
                            len(req.prompt))
         self.cache.extend_seq(req.seq_slot)
-        req.generated.append(tok)
         req.prefill_pos = len(req.prompt)
-        if not req.first_token_at:      # preserve TTFT across preemptions
-            req.first_token_at = time.time()
-        self.tokens_generated += 1
+        self._record_token(req, tok)
 
     def _prefill_forward(self, plan: list[tuple[Request, int, int]]):
         """[Split baseline] ONE ragged forward over the planned chunk
@@ -584,6 +791,7 @@ class Engine:
         no_history = int(starts.max()) == 0
 
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens, ttot)
+        self.prefill_tokens += ttot
         self.forward_calls += 1
         self._count_trace(("prefill", nseq, cmax, ttot, no_history))
         with self.lm._ctx():
@@ -641,15 +849,14 @@ class Engine:
         for r, s, t in plan:
             r.prefill_pos = s + t
             self.cache.seq_len[r.seq_slot] = r.prefill_pos
+            if self.ecfg.prefix_caching and r.prefill_pos == len(r.prompt):
+                self.cache.publish_prefix(r.seq_slot, r.prompt)
         if finished:
             toks = self._sample_batch(
-                logits[0], [r.request_id for _, r in finished],
+                logits[0], [r for _, r in finished],
                 [len(r.prompt) for _, r in finished])
             for (_, r), tok in zip(finished, toks):
-                r.generated.append(int(tok))
-                if not r.first_token_at:    # TTFT survives preemptions
-                    r.first_token_at = time.time()
-                self.tokens_generated += 1
+                self._record_token(r, tok)
 
     def _attend_paged(self, li: int, q, block_tables, lengths):
         """One kernel call for the whole decode batch — block tables in,
@@ -726,8 +933,6 @@ class Engine:
             logits = np.asarray(self.lm._head(self.params, hN))
         self.cache.advance(slots)
         toks = self._sample_batch(
-            logits[:, -1], [r.request_id for r in reqs],
-            [r.total_len for r in reqs])
+            logits[:, -1], reqs, [r.total_len for r in reqs])
         for r, tok in zip(reqs, toks):
-            r.generated.append(int(tok))
-            self.tokens_generated += 1
+            self._record_token(r, tok)

@@ -24,6 +24,25 @@ writes a ragged chunk's quantized KV into precomputed (page, offset)
 destinations — prompts stream through the pools incrementally, so a
 prompt's KV is never resident in fp beyond the in-flight chunk.
 
+**Page ownership is refcounted** (not per-seq): every mapped page
+carries a reference count, and full prompt pages can be *published*
+into a chained-hash prefix index (`publish_prefix`) once their
+sequence's prefill completes. A later request whose prompt shares that
+prefix adopts the published pages at admission (`match_prefix` →
+`allocate_seq(prefix_pages=...)`): its block table starts with the
+shared pages (ref+1 each) and only the un-cached suffix is ever
+forwarded or written. Shared pages are written by nobody — a sequence
+only writes positions >= its matched prefix, which land in its private
+pages; static per-channel scales make the int4 bytes position- and
+request-independent, so published pages are bit-exact for every reader.
+
+Freeing is refcount-exact: `free_seq` decrements every mapped page;
+pages reaching ref==0 go back to the free list unless they are
+published, in which case they move to a *reclaimable* LRU — still
+cached (a future `match_prefix` revives them) but counted in
+`pages_free` and evicted LRU-first the moment an allocation would
+otherwise fail, BEFORE any scheduler preemption fires.
+
 The legacy gather path (`gather_kv`) that materializes a sequence's
 packed KV contiguously (a per-token O(context) copy) is retained only as
 the benchmark baseline and for tests.
@@ -32,6 +51,8 @@ the benchmark baseline and for tests.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -84,12 +105,56 @@ class PagedKV4Cache:
         self.page_count = np.zeros((pcfg.max_seqs,), np.int32)
         self.free_pages = list(range(pcfg.num_pages - 1, -1, -1))
         self.active = set()
+        # refcounted ownership + prefix cache: ref[p] = sequences mapping
+        # page p; prefix_index: chain-hash key → published physical page;
+        # page_key: inverse map for published pages; _reclaimable: LRU of
+        # published pages with ref==0 (cached but immediately evictable)
+        self.ref = np.zeros((pcfg.num_pages,), np.int32)
+        self.prefix_index: dict = {}
+        self.page_key: dict = {}
+        self._reclaimable: OrderedDict = OrderedDict()
 
     # ------------------------------------------------------------- allocator
 
     @property
     def pages_free(self) -> int:
-        return len(self.free_pages)
+        """Pages allocatable right now: the free list plus published
+        ref==0 pages (evicted LRU-first on demand)."""
+        return len(self.free_pages) + len(self._reclaimable)
+
+    def _acquire_page(self) -> Optional[int]:
+        """Pop a free page, evicting the LRU reclaimable prefix page
+        (and its index entry) if the free list is empty. Eviction runs
+        BEFORE any scheduler preemption can fire: allocation only fails
+        once both pools are dry."""
+        if self.free_pages:
+            p = self.free_pages.pop()
+        elif self._reclaimable:
+            p, key = self._reclaimable.popitem(last=False)
+            del self.prefix_index[key]
+            del self.page_key[p]
+        else:
+            return None
+        self.ref[p] = 1
+        return p
+
+    def _adopt_page(self, p: int):
+        """Take a reference on a published page (a prefix-cache hit)."""
+        if int(self.ref[p]) == 0:
+            self._reclaimable.pop(p, None)
+        self.ref[p] += 1
+
+    def _release_page(self, p: int):
+        self.ref[p] -= 1
+        if self.ref[p] > 0:
+            return                      # still shared
+        key = self.page_key.get(p)
+        if key is not None and self.prefix_index.get(key) == p:
+            # published: keep the content cached, evictable LRU-first
+            self._reclaimable[p] = key
+            self._reclaimable.move_to_end(p)
+        else:
+            self.free_pages.append(p)
 
     @property
     def max_tokens_per_seq(self) -> int:
@@ -99,17 +164,37 @@ class PagedKV4Cache:
         ps = self.pcfg.page_size
         return (tokens + ps - 1) // ps
 
-    def allocate_seq(self, seq_id: int, reserve_tokens: int) -> bool:
+    def pages_available_for(self, prefix_pages) -> int:
+        """Acquirable pages for an allocation that will adopt
+        ``prefix_pages``: matched pages sitting on the reclaimable LRU
+        (ref==0) count in ``pages_free`` but are about to be adopted —
+        they cannot double as headroom for the new acquisitions."""
+        reserved = sum(1 for p in prefix_pages if int(self.ref[int(p)]) == 0)
+        return self.pages_free - reserved
+
+    def allocate_seq(self, seq_id: int, reserve_tokens: int,
+                     prefix_pages: tuple = (),
+                     prefix_tokens: int = 0) -> bool:
         """Reserve pages for ``reserve_tokens`` (a whole prompt, or just
         its first prefill chunk); False if pool exhausted or the request
-        exceeds the per-sequence page cap."""
-        need = self.pages_needed(reserve_tokens)
-        if (need > len(self.free_pages) or seq_id in self.active
+        exceeds the per-sequence page cap.
+
+        ``prefix_pages``/``prefix_tokens`` (from :meth:`match_prefix`):
+        published pages covering the request's shared prompt prefix —
+        adopted (ref+1) instead of allocated, so only the un-cached
+        suffix is charged to the pool; ``seq_len`` starts at the end of
+        the shared prefix (its KV is already resident)."""
+        need = max(self.pages_needed(reserve_tokens), len(prefix_pages))
+        if (need - len(prefix_pages) > self.pages_available_for(prefix_pages)
+                or seq_id in self.active
                 or need > self.pcfg.max_pages_per_seq):
             return False
-        pages = [self.free_pages.pop() for _ in range(need)]
-        self.block_table[seq_id, :need] = pages
-        self.seq_len[seq_id] = 0
+        for i, p in enumerate(prefix_pages):
+            self._adopt_page(int(p))
+            self.block_table[seq_id, i] = int(p)
+        for i in range(len(prefix_pages), need):
+            self.block_table[seq_id, i] = self._acquire_page()
+        self.seq_len[seq_id] = prefix_tokens
         self.page_count[seq_id] = need
         self.active.add(seq_id)
         return True
@@ -122,9 +207,12 @@ class PagedKV4Cache:
         have = int(self.page_count[seq_id])
         if need <= have:
             return True
-        if not self.free_pages or need > self.pcfg.max_pages_per_seq:
+        if need > self.pcfg.max_pages_per_seq:
             return False
-        self.block_table[seq_id, have] = self.free_pages.pop()
+        p = self._acquire_page()
+        if p is None:
+            return False
+        self.block_table[seq_id, have] = p
         self.page_count[seq_id] = have + 1
         return True
 
@@ -145,20 +233,78 @@ class PagedKV4Cache:
         cap = min(self.pages_needed(target_tokens),
                   self.pcfg.max_pages_per_seq)
         have = int(self.page_count[seq_id])
-        while have < cap and self.free_pages:
-            self.block_table[seq_id, have] = self.free_pages.pop()
+        while have < cap:
+            p = self._acquire_page()
+            if p is None:
+                break
+            self.block_table[seq_id, have] = p
             have += 1
         self.page_count[seq_id] = have
         return have * self.pcfg.page_size
 
     def free_seq(self, seq_id: int):
+        """Drop the sequence's references. Private pages return to the
+        free list; shared pages survive for their other owners; published
+        pages reaching ref==0 stay cached on the reclaimable LRU."""
         pages = self.block_table[seq_id]
         for p in pages[pages >= 0]:
-            self.free_pages.append(int(p))
+            self._release_page(int(p))
         self.block_table[seq_id, :] = -1
         self.seq_len[seq_id] = 0
         self.page_count[seq_id] = 0
         self.active.discard(seq_id)
+
+    # ---------------------------------------------------------- prefix cache
+
+    def _page_keys(self, tokens, nfull: int) -> list:
+        """Chained page digests: key_i commits to ALL tokens through
+        page i, so a single dict hit proves the whole prefix matches.
+        SHA-256 (not builtin ``hash``): a page key maps straight to
+        another request's KV pages, so keys must be collision-resistant
+        even against adversarial prompts — builtin tuple hashing is
+        predictable and forgeable."""
+        ps = self.pcfg.page_size
+        keys, key = [], b""
+        for i in range(nfull):
+            chunk = np.asarray(tokens[i * ps:(i + 1) * ps], np.int64)
+            key = hashlib.sha256(key + chunk.tobytes()).digest()
+            keys.append(key)
+        return keys
+
+    def match_prefix(self, tokens) -> tuple[list, int]:
+        """Longest published prefix of ``tokens`` → (pages, matched).
+
+        Walks full pages through the prefix index and stops at the first
+        miss. Matching is capped one token short of the full prompt so
+        at least one token always flows through prefill — the forward
+        over that suffix is what produces the request's first logits.
+        Pure lookup: takes no references (adoption happens inside
+        :meth:`allocate_seq`, with no eviction possible in between)."""
+        nfull = max(0, (len(tokens) - 1)) // self.pcfg.page_size
+        pages = []
+        for key in self._page_keys(tokens, nfull):
+            p = self.prefix_index.get(key)
+            if p is None:
+                break
+            pages.append(p)
+        return pages, len(pages) * self.pcfg.page_size
+
+    def publish_prefix(self, seq_id: int, tokens):
+        """Publish the sequence's full prompt pages into the prefix
+        index (called once its prefill completes — the pages' int4
+        content is final; everything the sequence writes from here on
+        lands in later, private pages). First publisher wins: a page
+        whose chain key is already indexed is skipped, keeping its
+        owner's copy private."""
+        nfull = len(tokens) // self.pcfg.page_size
+        for i, key in enumerate(self._page_keys(tokens, nfull)):
+            if key in self.prefix_index:
+                continue
+            page = int(self.block_table[seq_id, i])
+            if self.page_key.get(page) is not None:
+                continue            # already published under another key
+            self.prefix_index[key] = page
+            self.page_key[page] = key
 
     # ------------------------------------------------------------- device ops
 

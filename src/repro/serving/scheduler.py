@@ -11,6 +11,13 @@ batch is formed. Policy (vLLM-style):
   prompt). Prompts that can never fit ``max_pages_per_seq``, or whose
   prompt + one decode token exceeds the whole pool, are failed
   immediately with ``stop_reason="prompt_too_long"``.
+* with ``prefix_cache=True`` admission first consults the cache's
+  prefix index (``cache.match_prefix``): a request whose prompt prefix
+  is already published adopts the shared pages, is charged only its
+  un-cached pages against the pool, and starts with ``prefill_pos`` at
+  the end of the shared prefix — only the suffix streams through
+  ``plan_prefill``. A *preempted* request re-admits through the same
+  path, so its own previously-published prompt pages are a warm hit;
 * requests track ``prefill_pos`` (prompt tokens already through the
   model) so prefill proceeds chunk-by-chunk and preemption can fire
   mid-prefill — a preempted request simply restarts at ``prefill_pos=0``;
@@ -29,7 +36,9 @@ from __future__ import annotations
 import dataclasses
 import json
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
+
+from repro.serving.api import RequestState, SamplingParams
 
 __all__ = ["Request", "Scheduler"]
 
@@ -45,6 +54,13 @@ class Request:
     prefill_pos: int = 0           # prompt tokens already through the model
     stop_reason: Optional[str] = None   # None = ran to max_new_tokens
     first_token_at: float = 0.0    # wall clock of first generated token
+    params: Optional[SamplingParams] = None   # None → engine defaults
+    state: RequestState = RequestState.QUEUED
+    cached_tokens: int = 0         # prefix-cache hit tokens, last admission
+    events: list = dataclasses.field(          # RequestOutput stream log
+        default_factory=list, repr=False, compare=False)
+    on_event: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def prefilled(self) -> bool:
@@ -80,14 +96,20 @@ class Scheduler:
     def submit(self, req: Request):
         self.waiting.append(req)
 
-    def admit(self, cache,
-              first_chunk_tokens: Optional[int] = None) -> list[Request]:
+    def admit(self, cache, first_chunk_tokens: Optional[int] = None,
+              prefix_cache: bool = False) -> list[Request]:
         """Admit waiting requests while pages + slots are available.
 
         ``first_chunk_tokens``: with chunked prefill, admission only
         needs pages for the first chunk (later chunks acquire pages via
         ``cache.grow_to``); ``None`` reserves the whole prompt (the
-        whole-prompt baseline path)."""
+        whole-prompt baseline path).
+
+        ``prefix_cache``: consult ``cache.match_prefix`` first — the
+        matched pages are adopted rather than allocated, only the
+        UN-CACHED pages are charged against ``pages_free``, and the
+        request starts at ``prefill_pos = matched`` so just the suffix
+        streams through the prefill plan."""
         admitted = []
         while (self.waiting and self._free_slots
                and len(self.running) < self.max_batch):
@@ -104,23 +126,31 @@ class Scheduler:
                 # last page has slack for its decode tokens is servable.
                 self.waiting.popleft()
                 req.stop_reason = "prompt_too_long"
+                req.state = RequestState.FINISHED
                 self.finished.append(req)
                 continue
+            pages, matched = (cache.match_prefix(req.prompt)
+                              if prefix_cache else ([], 0))
             reserve = (len(req.prompt) if first_chunk_tokens is None
-                       else min(len(req.prompt), first_chunk_tokens))
+                       else min(len(req.prompt),
+                                matched + first_chunk_tokens))
             # token-granular decode headroom: one extra TOKEN (not a
             # whole extra page) once the full prompt is resident — a
             # prompt whose last page has slack admits into an exactly-
             # sized pool
             headroom = reserve + 1 if reserve == len(req.prompt) else reserve
-            if cache.pages_needed(headroom) > cache.pages_free:
+            if (cache.pages_needed(headroom) - len(pages)
+                    > cache.pages_available_for(pages)):
                 break
             slot = self._free_slots.pop()
-            if not cache.allocate_seq(slot, reserve):
+            if not cache.allocate_seq(slot, reserve, prefix_pages=pages,
+                                      prefix_tokens=matched):
                 self._free_slots.append(slot)
                 break
             req.seq_slot = slot
-            req.prefill_pos = 0
+            req.prefill_pos = matched     # shared prefix is already resident
+            req.cached_tokens = matched
+            req.state = RequestState.PREFILLING
             self.waiting.popleft()
             self.running.append(req)
             admitted.append(req)
@@ -165,6 +195,13 @@ class Scheduler:
     def preempt_one(self, cache) -> Optional[Request]:
         """Evict the youngest running sequence to the waiting queue.
 
+        Only the victim's own references are dropped (``cache.free_seq``
+        is refcount-exact): pages it shared with other sequences stay
+        mapped for them, and its own *published* prompt pages stay
+        cached — re-admission goes back through ``match_prefix``, so a
+        warm prefix cache turns the re-prefill into a page-table copy
+        plus the un-cached tail.
+
         Finished requests (done but not yet completed by the engine's
         end-of-step sweep) are never victims: preempting one would fold
         its generated text back into the prompt and silently destroy its
@@ -183,6 +220,7 @@ class Scheduler:
         req.max_new_tokens -= len(req.generated)
         req.generated = []
         req.prefill_pos = 0
+        req.state = RequestState.QUEUED
         self.waiting.appendleft(req)
         self.preemptions += 1
         return req
@@ -192,7 +230,27 @@ class Scheduler:
         cache.free_seq(req.seq_slot)
         self._free_slots.append(req.seq_slot)
         req.seq_slot = -1
+        req.state = RequestState.FINISHED
         self.finished.append(req)
+
+    def abort(self, req: Request, cache) -> bool:
+        """Cancel ``req`` wherever it is in the lifecycle. Running
+        sequences (mid-prefill or mid-decode) drop their page references
+        refcount-exactly; queued requests just leave the queue. Returns
+        False if the request already reached a terminal state."""
+        if req.state.terminal:
+            return False
+        if req in self.running:
+            self.running.remove(req)
+            cache.free_seq(req.seq_slot)
+            self._free_slots.append(req.seq_slot)
+            req.seq_slot = -1
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        req.stop_reason = "aborted"
+        req.state = RequestState.ABORTED
+        self.finished.append(req)
+        return True
 
     @property
     def has_work(self) -> bool:
@@ -205,17 +263,21 @@ class Scheduler:
         their device KV is lost on failure and recomputed on restore)."""
         reqs = []
         for r in list(self.waiting) + self.running:
-            reqs.append({
+            entry = {
                 "request_id": r.request_id,
                 "prompt": list(r.prompt) + list(r.generated),
                 "max_new_tokens": r.max_new_tokens - len(r.generated),
                 "arrived_at": r.arrived_at,
-            })
+            }
+            if r.params is not None:
+                entry["params"] = dataclasses.asdict(r.params)
+            reqs.append(entry)
         done = [{
             "request_id": r.request_id,
             "prompt": list(r.prompt),
             "generated": list(r.generated),
             "stop_reason": r.stop_reason,
+            "state": r.state.value,
         } for r in self.finished]
         return json.dumps({"pending": reqs, "finished": done})
 
@@ -224,14 +286,17 @@ class Scheduler:
         state = json.loads(blob)
         sched = cls(max_batch, max_seqs)
         for r in state["pending"]:
+            params = r.get("params")
             sched.submit(Request(
                 request_id=r["request_id"], prompt=r["prompt"],
                 max_new_tokens=r["max_new_tokens"],
-                arrived_at=r["arrived_at"]))
+                arrived_at=r["arrived_at"],
+                params=SamplingParams(**params) if params else None))
         for r in state["finished"]:
             req = Request(request_id=r["request_id"], prompt=r["prompt"],
                           max_new_tokens=0)
             req.generated = r["generated"]
             req.stop_reason = r.get("stop_reason")
+            req.state = RequestState(r.get("state", "finished"))
             sched.finished.append(req)
         return sched

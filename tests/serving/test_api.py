@@ -1,0 +1,368 @@
+"""Request-lifecycle API: streaming events, abort at every lifecycle
+state, per-request sampling params, and refcounted prefix-cache reuse
+(shared-prefix parity, preempt→resume under a warm cache).
+
+Parity scenarios use the weight-only + calibrated ``kv_range`` regime
+of the chunked/unified parity suites: int4 KV error stays below greedy
+argmax margins, so prefix-cache on/off is token-identical.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.api import RequestState, SamplingParams
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(max_batch=4, num_pages=64, page_size=8,
+                    max_pages_per_seq=16, prefill_chunk_tokens=24,
+                    kv_range=4.0)
+    defaults.update(kw)
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults))
+
+
+def prompts_with_shared_prefix(cfg, n=3, prefix_len=32, suffix_len=5):
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+    return [prefix + rng.integers(1, cfg.vocab_size, suffix_len).tolist()
+            for _ in range(n)]
+
+
+def run_staggered(eng, prompts, max_new):
+    """Serve the first prompt to completion, then the rest — later
+    arrivals see whatever the first published into the prefix cache."""
+    eng.add_request(0, prompts[0], max_new)
+    eng.run()
+    for i, p in enumerate(prompts[1:], start=1):
+        eng.add_request(i, p, max_new)
+    done = eng.run()
+    return {r.request_id: list(r.generated) for r in done}
+
+
+# ------------------------------------------------------------ prefix cache
+
+
+def test_shared_prefix_parity_and_fewer_prefill_tokens(setup):
+    """N requests sharing a system prompt: cache-on is greedy-token-
+    identical to cache-off while forwarding strictly fewer prompt
+    tokens (the shared prefix is served from published pages)."""
+    cfg = setup[0]
+    prompts = prompts_with_shared_prefix(cfg)
+    off = make_engine(setup, prefix_cache=False)
+    toks_off = run_staggered(off, prompts, max_new=6)
+    on = make_engine(setup, prefix_cache=True)
+    toks_on = run_staggered(on, prompts, max_new=6)
+
+    assert toks_on == toks_off
+    assert off.prefix_hit_tokens == 0
+    # each later request hits the 32-token (4-page) published prefix
+    assert on.prefix_hit_tokens == 2 * 32
+    assert on.prefill_tokens < off.prefill_tokens
+    assert on.prefill_tokens + on.prefix_hit_tokens == off.prefill_tokens
+    # lifecycle bookkeeping: everything finished cleanly
+    for r in on.sched.finished:
+        assert r.state == RequestState.FINISHED
+        assert r.stop_reason is None
+
+
+def test_prefix_cache_refcounts_are_exact(setup):
+    """After the workload drains, every page is reclaimable: refcounts
+    all zero, pages_free back to the full pool (published pages survive
+    on the reclaimable LRU and still count as free)."""
+    cfg = setup[0]
+    eng = make_engine(setup, prefix_cache=True)
+    run_staggered(eng, prompts_with_shared_prefix(cfg), max_new=4)
+    assert not eng.cache.active
+    assert (eng.cache.ref == 0).all()
+    assert eng.cache.pages_free == eng.ecfg.num_pages
+    # the published prefix is still cached — a new identical prompt hits
+    pages, matched = eng.cache.match_prefix(
+        prompts_with_shared_prefix(cfg)[0])
+    assert matched >= 32 and len(pages) >= 4
+
+
+def test_preempt_resume_warm_prefix_is_a_hit(setup):
+    """Satellite regression: a preempted request drops only its private
+    pages; re-admission goes through match_prefix, so its own
+    already-published prompt pages are a warm hit and only the tail
+    re-forwards."""
+    cfg = setup[0]
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 18).tolist()   # 2 full pages
+    eng = make_engine(setup, prefix_cache=True)
+    h = eng.submit(prompt, SamplingParams(max_new_tokens=8))
+    while not eng._resolve(h).prefilled:
+        eng.step()
+    req = eng._resolve(h)
+    assert req.state == RequestState.DECODING
+    assert eng.cache.match_prefix(prompt)[1] == 16   # prefix published
+    victim = eng.sched.preempt_one(eng.cache)
+    assert victim is req and req.state == RequestState.QUEUED
+    # its published pages survived the preemption, ref==0 (reclaimable)
+    assert eng.cache.match_prefix(prompt)[1] == 16
+    eng.run()
+    assert req.state == RequestState.FINISHED
+    assert req.cached_tokens == 16                   # warm re-admission
+    assert eng.prefix_hit_tokens == 16
+    # stream log == final output even across the preemption fold
+    streamed = [e.token for e in req.events if e.token is not None]
+    assert streamed == req.prompt[len(prompt):] + req.generated
+    assert eng.cache.pages_free == eng.ecfg.num_pages
+
+
+def test_prefix_cache_off_for_whole_prompt_baseline(setup):
+    eng = make_engine(setup, prefill_mode="whole", prefix_cache=True)
+    assert not eng.ecfg.prefix_caching
+    prompts = prompts_with_shared_prefix(setup[0])
+    run_staggered(eng, prompts, max_new=2)
+    assert eng.prefix_hit_tokens == 0
+
+
+# ------------------------------------------------------------------- abort
+
+
+def test_abort_while_queued(setup):
+    eng = make_engine(setup)
+    base = eng.cache.pages_free
+    h = eng.submit([1, 2, 3, 4], SamplingParams(max_new_tokens=4))
+    assert eng.abort(h)
+    req = eng.result(h)
+    assert req.state == RequestState.ABORTED
+    assert req.stop_reason == "aborted" and req.generated == []
+    assert eng.cache.pages_free == base
+    assert not eng.sched.waiting and not eng.sched.running
+    assert not eng.abort(h)              # already terminal → no-op
+    ev = eng.events()
+    assert len(ev) == 1 and ev[0].finished
+    assert ev[0].state == RequestState.ABORTED
+
+
+def test_abort_mid_prefill_restores_pages(setup):
+    cfg = setup[0]
+    rng = np.random.default_rng(5)
+    eng = make_engine(setup, prefill_chunk_tokens=8)
+    base = eng.cache.pages_free
+    h = eng.submit(rng.integers(1, cfg.vocab_size, 40).tolist(),
+                   SamplingParams(max_new_tokens=4))
+    eng.step()
+    req = eng.result(h)
+    assert req.state == RequestState.PREFILLING
+    assert 0 < req.prefill_pos < len(req.prompt)
+    assert eng.cache.pages_free < base   # pages held mid-prefill
+    assert eng.abort(h)
+    assert eng.cache.pages_free == base  # nothing published mid-prefill
+    assert (eng.cache.ref == 0).all()
+    assert req.state == RequestState.ABORTED
+    assert not eng.sched.has_work
+
+
+def test_abort_mid_decode_restores_pages_and_serves_others(setup):
+    cfg = setup[0]
+    rng = np.random.default_rng(6)
+    eng = make_engine(setup)
+    base = eng.cache.pages_free
+    ha = eng.submit(rng.integers(1, cfg.vocab_size, 12).tolist(),
+                    SamplingParams(max_new_tokens=50))
+    hb = eng.submit(rng.integers(1, cfg.vocab_size, 9).tolist(),
+                    SamplingParams(max_new_tokens=5))
+    while len(eng.result(ha).generated) < 3:
+        eng.step()
+    assert eng.result(ha).state == RequestState.DECODING
+    assert eng.abort(ha)
+    done = eng.run()
+    assert eng.result(hb).state == RequestState.FINISHED
+    assert len(eng.result(hb).generated) == 5
+    assert eng.result(ha) in done
+    assert len(eng.result(ha).generated) == 3    # kept what it had
+    # refcount-exact: all pages back (published prompt pages reclaimable)
+    assert eng.cache.pages_free == base
+    assert (eng.cache.ref == 0).all()
+    assert eng.aborted_count == 1
+
+
+# -------------------------------------------------------- streaming/events
+
+
+def test_stream_yields_tokens_in_final_order(setup):
+    cfg = setup[0]
+    rng = np.random.default_rng(8)
+    eng = make_engine(setup)
+    handles = [eng.submit(rng.integers(1, cfg.vocab_size, n).tolist(),
+                          SamplingParams(max_new_tokens=6))
+               for n in (11, 5, 17)]
+    events = list(eng.stream(handles[1]))
+    toks = [e.token for e in events if e.token is not None]
+    req = eng.result(handles[1])
+    assert toks == req.generated and len(toks) == 6
+    assert events[-1].finished and events[-1].state == RequestState.FINISHED
+    # the other requests rode along in the same steps and also finish
+    eng.run()
+    for h in handles:
+        r = eng.result(h)
+        assert [e.token for e in r.events if e.token is not None] \
+            == r.generated
+
+
+def test_events_and_callback_cover_every_token(setup):
+    cfg = setup[0]
+    rng = np.random.default_rng(9)
+    eng = make_engine(setup)
+    pushed = []
+    h = eng.submit(rng.integers(1, cfg.vocab_size, 7).tolist(),
+                   SamplingParams(max_new_tokens=4),
+                   on_event=pushed.append)
+    eng.run()
+    drained = eng.events()
+    req = eng.result(h)
+    assert [e.token for e in pushed if e.token is not None] == req.generated
+    assert pushed == drained            # same objects, same order
+    assert pushed[-1].finished and pushed[-1].stop_reason is None
+    assert eng.events() == []           # drained exactly once
+
+
+# ------------------------------------------------- per-request sampling
+
+
+def test_per_request_sampling_params(setup):
+    """One batch mixing a greedy and a stochastic request: the greedy
+    request's text matches a solo greedy run, and the stochastic one is
+    reproducible (keyed by request_id/position) and actually varied."""
+    cfg = setup[0]
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 10).tolist()
+
+    # reference batch has the same shape (two rows) so the jitted
+    # forward traces identically — only the second row's sampler differs
+    ref = make_engine(setup)
+    hs = ref.submit(prompt, SamplingParams(max_new_tokens=8))
+    ref.submit(prompt, SamplingParams(max_new_tokens=8))
+    ref.run()
+    greedy_ref = list(ref.result(hs).generated)
+
+    outs = []
+    for _ in range(2):
+        eng = make_engine(setup)
+        hg = eng.submit(prompt, SamplingParams(max_new_tokens=8))
+        ht = eng.submit(prompt, SamplingParams(
+            max_new_tokens=8, temperature=0.9, top_k=8))
+        eng.run()
+        assert list(eng.result(hg).generated) == greedy_ref
+        outs.append(list(eng.result(ht).generated))
+    assert outs[0] == outs[1]           # reproducible stochastic text
+    assert len(set(outs[0])) > 1        # and actually sampled
+
+
+def test_submit_auto_ids_coexist_with_add_request(setup):
+    eng = make_engine(setup)
+    eng.add_request(0, [1, 2, 3], 2)
+    h = eng.submit([4, 5, 6], SamplingParams(max_new_tokens=2))
+    assert h.request_id != 0 and h.prompt_len == 3
+    with pytest.raises(ValueError):
+        eng.submit([7], request_id=0)
+    done = eng.run()
+    assert sorted(r.request_id for r in done) == sorted([0, h.request_id])
+
+
+def test_pool_donation_gated_off_on_cpu(setup):
+    """Buffer donation for the KV pools is only enabled on backends
+    that honor it; the CPU test backend must not donate (XLA would warn
+    and copy anyway)."""
+    eng = make_engine(setup)
+    assert eng.donate_pools == (jax.default_backend() in ("tpu", "gpu"))
+    assert jax.default_backend() == "cpu" and not eng.donate_pools
+
+
+def test_prompt_too_long_emits_terminal_event(setup):
+    """Admission-time rejections never pass through the normal complete
+    path but still owe their terminal event (event-driven consumers
+    would otherwise wait forever)."""
+    seen = []
+    eng = make_engine(setup, max_pages_per_seq=2)    # cap = 16 tokens
+    h = eng.submit(list(range(1, 40)), SamplingParams(max_new_tokens=2),
+                   on_event=seen.append)
+    eng.submit([1, 2, 3], SamplingParams(max_new_tokens=2))
+    eng.run()
+    req = eng.result(h)
+    assert req.stop_reason == "prompt_too_long"
+    assert req.state == RequestState.FINISHED
+    assert len(seen) == 1 and seen[0].finished
+    assert seen[0].stop_reason == "prompt_too_long"
+    replay = list(eng.stream(h))                     # replays the log
+    assert len(replay) == 1 and replay[0].finished
+    assert any(e.request_id == h.request_id and e.finished
+               for e in eng.events())
+
+
+def test_request_id_reusable_after_terminal(setup):
+    """Terminal ids can be recycled (the pre-lifecycle API allowed it);
+    only genuinely in-flight ids are rejected."""
+    eng = make_engine(setup)
+    eng.add_request(0, [1, 2, 3], 2)
+    eng.run()
+    eng.add_request(0, [4, 5, 6], 3)                 # reuse after finish
+    done = eng.run()
+    assert len(eng.result(0).generated) == 3
+    assert sum(1 for r in done if r.request_id == 0) == 2
+
+
+def test_reentrant_abort_from_callback_keeps_terminal_event_last(setup):
+    """An on_event callback that aborts ANOTHER request mid-step must
+    not cause a token event after that request's terminal event."""
+    eng = make_engine(setup)
+    hb = eng.submit([9, 8, 7, 6], SamplingParams(max_new_tokens=6))
+
+    def killer(ev):
+        if ev.token is not None:
+            eng.abort(hb)
+
+    eng.submit([1, 2, 3], SamplingParams(max_new_tokens=6),
+               on_event=killer)
+    eng.run()
+    b = eng.result(hb)
+    assert b.state == RequestState.ABORTED
+    terminal_at = [i for i, e in enumerate(b.events) if e.finished]
+    assert terminal_at == [len(b.events) - 1]        # terminal is LAST
+    assert [e.token for e in b.events if e.token is not None] \
+        == b.generated
+
+
+def test_reentrant_abort_during_length_cap_reservation(setup):
+    """A length_cap completion fires its terminal event INSIDE the
+    decode-reservation loop; if its callback aborts a request still on
+    the pending/ready lists, that request's freed slot (-1) must never
+    reach extend_seq or the forward (numpy would wrap the index and
+    corrupt another sequence's pages)."""
+    eng = make_engine(setup, page_size=4, max_pages_per_seq=2,
+                      num_pages=16)                  # cap = 8 tokens/seq
+    hb = eng.submit([9, 8, 7, 6], SamplingParams(max_new_tokens=20))
+
+    def killer(ev):
+        if ev.finished and ev.stop_reason == "length_cap":
+            eng.abort(hb)
+
+    ha = eng.submit([1, 2, 3, 4, 5], SamplingParams(max_new_tokens=20),
+                    on_event=killer)
+    eng.run(max_steps=60)
+    a, b = eng.result(ha), eng.result(hb)
+    assert a.state == RequestState.FINISHED
+    assert a.stop_reason == "length_cap"
+    assert b.state == RequestState.ABORTED
+    # B's event log stays well-formed: terminal last, tokens == output
+    assert [e.finished for e in b.events].index(True) == len(b.events) - 1
+    assert [e.token for e in b.events if e.token is not None] == b.generated
+    # no leaked or corrupted pages
+    assert eng.cache.pages_free == 16 and (eng.cache.ref == 0).all()
