@@ -1,6 +1,7 @@
 """Paged KV4 pool: write/append/gather roundtrips vs direct quant, plus
-allocator invariants for the O(1) page-count bookkeeping and chunked
-page acquisition (grow_to)."""
+allocator invariants for the O(1) page-count bookkeeping, chunked page
+acquisition (grow_to), and the refcounted prefix cache (publish/match/
+adopt, reclaimable-LRU eviction)."""
 import jax.numpy as jnp
 import numpy as np
 
@@ -97,3 +98,111 @@ def test_write_gather_roundtrip(rng):
     # earlier tokens untouched
     np.testing.assert_array_equal(np.asarray(kp2[0, :, :t]),
                                   np.asarray(kp_direct[0]))
+
+
+# --------------------------------------------- refcounted prefix cache
+
+
+def make_prefix_cache(num_pages=8, page_size=4, max_seqs=4):
+    cfg = get_smoke_config("llama3_8b")
+    return PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=num_pages, page_size=page_size,
+                            max_seqs=max_seqs, max_pages_per_seq=8), 1)
+
+
+def test_publish_match_adopt_share_and_reclaim():
+    cache = make_prefix_cache()
+    tokens = list(range(1, 13))                 # 12 tokens = 3 full pages
+    assert cache.allocate_seq(0, 12)
+    cache.seq_len[0] = 12
+    cache.publish_prefix(0, tokens)
+    # matching caps one token short of the prompt: a prompt equal to the
+    # published tokens matches only 2 of its 3 pages
+    assert cache.match_prefix(tokens)[1] == 8
+    pages, matched = cache.match_prefix(tokens + [99, 100])
+    assert matched == 12 and len(pages) == 3
+    # adopt: second sequence shares all 3 pages, allocates 1 private
+    free_before = cache.pages_free
+    assert cache.allocate_seq(1, 14, prefix_pages=pages, prefix_tokens=12)
+    assert cache.pages_free == free_before - 1  # only the suffix charged
+    assert int(cache.seq_len[1]) == 12
+    assert (cache.ref[np.asarray(pages)] == 2).all()
+    np.testing.assert_array_equal(cache.block_table[1, :3],
+                                  cache.block_table[0, :3])
+    # shared pages survive the publisher's exit (ref 2 → 1)
+    cache.free_seq(0)
+    assert (cache.ref[np.asarray(pages)] == 1).all()
+    assert cache.match_prefix(tokens + [99])[1] == 12
+    # last owner leaves: published pages become reclaimable but stay
+    # cached (counted free, still matchable) — private page truly freed
+    cache.free_seq(1)
+    assert cache.pages_free == 8
+    assert (cache.ref == 0).all()
+    assert cache.match_prefix(tokens + [99])[1] == 12
+    # adopting a reclaimable page revives it off the LRU
+    pages2, m2 = cache.match_prefix(tokens + [5])
+    assert cache.allocate_seq(2, 13, prefix_pages=pages2, prefix_tokens=m2)
+    assert (cache.ref[np.asarray(pages2)] == 1).all()
+    cache.free_seq(2)
+
+
+def test_eviction_takes_lru_reclaimable_pages_first():
+    cache = make_prefix_cache(num_pages=3, page_size=4)
+    prompt_a = [1, 2, 3, 4, 9]                  # one full publishable page
+    prompt_b = [5, 6, 7, 8, 9]
+    assert cache.allocate_seq(0, 5)
+    cache.seq_len[0] = 5
+    cache.publish_prefix(0, prompt_a)
+    cache.free_seq(0)                           # page(a) → reclaimable
+    assert cache.allocate_seq(1, 5)
+    cache.seq_len[1] = 5
+    cache.publish_prefix(1, prompt_b)
+    cache.free_seq(1)                           # page(b) → reclaimable
+    assert cache.pages_free == 3
+    # demand 2 pages: 1 from the free list + evict the OLDEST
+    # reclaimable page (a's) — b's stays cached
+    assert cache.allocate_seq(2, 8)
+    assert cache.match_prefix(prompt_a) == ([], 0)
+    assert cache.match_prefix(prompt_b)[1] == 4
+    # pool fully dry → allocation fails (this is where the scheduler's
+    # preemption would fire, strictly after LRU eviction)
+    assert not cache.allocate_seq(3, 8)
+
+
+def test_allocate_rejects_when_prefix_pages_cannot_double_as_headroom():
+    """A matched prefix sitting on the reclaimable LRU counts in
+    pages_free, but adopting it consumes that slack — the acquisition
+    check must not count those pages twice."""
+    cache = make_prefix_cache(num_pages=2, page_size=4)
+    tokens = list(range(1, 9))                  # 2 full pages
+    assert cache.allocate_seq(0, 8)
+    cache.seq_len[0] = 8
+    cache.publish_prefix(0, tokens)
+    cache.free_seq(0)
+    assert cache.pages_free == 2                # both reclaimable
+    pages, matched = cache.match_prefix(tokens + [7])
+    assert matched == 8
+    # needs 2 shared + 1 private = 3 pages; the pool only has 2
+    assert not cache.allocate_seq(1, 9, prefix_pages=pages,
+                                  prefix_tokens=matched)
+    assert cache.pages_free == 2                # no partial adoption
+    assert (cache.ref == 0).all()
+
+
+def test_first_publisher_wins_duplicate_prefix():
+    """Two sequences prefill the same prompt concurrently: the second
+    publish is a no-op and its pages stay private (freed on exit)."""
+    cache = make_prefix_cache()
+    tokens = [1, 2, 3, 4]
+    assert cache.allocate_seq(0, 4)
+    assert cache.allocate_seq(1, 4)
+    cache.seq_len[0] = cache.seq_len[1] = 4
+    cache.publish_prefix(0, tokens)
+    cache.publish_prefix(1, tokens)
+    p0, p1 = int(cache.block_table[0, 0]), int(cache.block_table[1, 0])
+    assert cache.page_key.get(p0) is not None
+    assert cache.page_key.get(p1) is None       # stayed private
+    cache.free_seq(1)
+    assert p1 in cache.free_pages               # truly freed
+    cache.free_seq(0)
+    assert cache.match_prefix(tokens + [9])[1] == 4

@@ -146,3 +146,51 @@ def test_snapshot_restore_roundtrip():
     assert len(s2.waiting) == 2
     first = s2.waiting[0]
     assert first.prompt == [1, 2, 9] and first.max_new_tokens == 4
+
+
+def test_admit_charges_only_uncached_pages():
+    """Prefix-aware admission: a prompt whose prefix is published by a
+    STILL-ACTIVE sequence adopts those pages and is charged only its
+    un-cached suffix — the same prompt is unadmittable without the
+    cache."""
+    cache = make_cache(num_pages=4, page_size=8)
+    shared = list(range(1, 17))                   # 2 full pages
+    assert cache.allocate_seq(7, 17)              # publisher holds 3 pages
+    cache.seq_len[7] = 17
+    cache.publish_prefix(7, shared + [77])
+    assert cache.pages_free == 1
+
+    sched = Scheduler(max_batch=4, max_seqs=4)
+    prompt = shared + [30, 31, 32, 33]            # 20 tokens, needs 3 pages
+    sched.submit(Request(0, prompt, 4, arrived_at=0.0))
+    # whole-prompt reserve isolates the charging arithmetic: cache off
+    # needs 3 pages (incl. +1 headroom) > 1 free → blocked
+    assert sched.admit(cache) == []
+    # cache on: 2 shared pages adopted, only 1 new page charged
+    admitted = sched.admit(cache, prefix_cache=True)
+    assert len(admitted) == 1
+    req = admitted[0]
+    assert req.prefill_pos == 16 and req.cached_tokens == 16
+    assert req.state.value == "prefilling"
+    np.testing.assert_array_equal(cache.block_table[req.seq_slot, :2],
+                                  cache.block_table[7, :2])
+    assert (cache.ref[cache.block_table[7, :2]] == 2).all()
+    assert cache.pages_free == 0
+
+
+def test_abort_releases_running_and_queued():
+    cache = make_cache()
+    sched = Scheduler(max_batch=1, max_seqs=8)
+    sched.submit(Request(0, [1, 2, 3], 5, arrived_at=0.0))
+    sched.submit(Request(1, [4, 5, 6], 5, arrived_at=1.0))
+    sched.admit(cache)
+    running, queued = sched.running[0], sched.waiting[0]
+    free_before_admit = cache.pages_free
+    assert sched.abort(queued, cache)
+    assert queued.state.value == "aborted"
+    assert queued.stop_reason == "aborted" and not sched.waiting
+    assert sched.abort(running, cache)
+    assert not sched.running and cache.pages_free == 16
+    assert not sched.abort(running, cache)        # terminal → no-op
+    assert {r.request_id for r in sched.finished} == {0, 1}
+    assert free_before_admit < 16                 # it really held pages
