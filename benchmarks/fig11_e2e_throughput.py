@@ -48,6 +48,10 @@ Two parts:
 ``--smoke`` runs parts (d), (e) and (f) — the CI end-to-end exercise of
 the prefill/decode interleave path, the unified-step dataflow, and the
 prefix-cached request lifecycle.
+
+``--attention-schedule work_queue|dense`` selects the paged-attention
+grid schedule for every measured engine part (default: the Stream-K
+work queue; ``dense`` is the fig10-ablated baseline rectangle).
 """
 
 from __future__ import annotations
@@ -121,7 +125,7 @@ def derived_table(in_len, out_len, verbose=True):
     return rel_rows
 
 
-def measured_engine(verbose=True):
+def measured_engine(verbose=True, sched="work_queue"):
     cfg = get_smoke_config("llama3_8b")
     qc = QuantConfig(int4_fraction=0.875, impl="ref")
     lm = LM(cfg)
@@ -132,7 +136,8 @@ def measured_engine(verbose=True):
     # emulate by giving the KV16-equivalent run 1/4 the pages.
     for name, pages in (("KV16-budget", 16), ("KV4-budget", 64)):
         eng = Engine(cfg, qparams, qc, EngineConfig(
-            max_batch=8, num_pages=pages, page_size=16))
+            max_batch=8, num_pages=pages, page_size=16,
+            attention_schedule=sched))
         for i in range(8):
             eng.add_request(i, list(range(1, 17)), 16)
         t0 = time.time()
@@ -149,7 +154,7 @@ def measured_engine(verbose=True):
     return results
 
 
-def measured_gather_vs_paged(verbose=True):
+def measured_gather_vs_paged(verbose=True, sched="work_queue"):
     """Same workload, gather vs paged decode path. Long generations make
     the gather copy's O(context)·layers byte traffic dominate."""
     cfg = get_smoke_config("llama3_8b")
@@ -162,7 +167,7 @@ def measured_gather_vs_paged(verbose=True):
     for mode in ("gather", "paged"):
         eng = Engine(cfg, qparams, qc, EngineConfig(
             max_batch=8, num_pages=96, page_size=8, max_pages_per_seq=16,
-            decode_attention=mode))
+            decode_attention=mode, attention_schedule=sched))
         for i in range(nreq):
             eng.add_request(i, list(range(1, in_len + 1)), out_len)
         t0 = time.time()
@@ -190,7 +195,7 @@ def measured_gather_vs_paged(verbose=True):
     return results
 
 
-def measured_prefill_modes(verbose=True):
+def measured_prefill_modes(verbose=True, sched="work_queue"):
     """Chunked vs whole-prompt prefill on a mixed workload: 4 ragged
     short requests decode while a 96-token prompt streams in. Chunked
     must be no slower in aggregate tok/s, bound its fp footprint by the
@@ -213,7 +218,7 @@ def measured_prefill_modes(verbose=True):
         eng = Engine(cfg, qparams, qc, EngineConfig(
             max_batch=6, num_pages=128, page_size=8, max_pages_per_seq=32,
             prefill_mode=mode, prefill_chunk_tokens=48,
-            unified_step=False))
+            unified_step=False, attention_schedule=sched))
         for i, n in enumerate(short_lens):
             eng.add_request(i, list(range(1, n + 1)), out_len)
         eng.add_request(4, list(range(1, long_len + 1)), out_len)
@@ -251,7 +256,7 @@ def measured_prefill_modes(verbose=True):
     return results
 
 
-def measured_unified_vs_split(verbose=True):
+def measured_unified_vs_split(verbose=True, sched="work_queue"):
     """Unified one-forward-per-step vs the split (prefill + decode)
     step on a ragged mixed workload. Raggedness is the point: every
     distinct (nseq, cmax, ttot) the split path packs is a fresh trace,
@@ -268,7 +273,8 @@ def measured_unified_vs_split(verbose=True):
     for mode in ("split", "unified"):
         eng = Engine(cfg, qparams, qc, EngineConfig(
             max_batch=6, num_pages=128, page_size=8, max_pages_per_seq=32,
-            prefill_chunk_tokens=24, unified_step=(mode == "unified")))
+            prefill_chunk_tokens=24, unified_step=(mode == "unified"),
+            attention_schedule=sched))
         for i, n in enumerate(lens):
             eng.add_request(
                 i, rng.integers(1, cfg.vocab_size, n).tolist(), out_len)
@@ -303,7 +309,7 @@ def measured_unified_vs_split(verbose=True):
     return results
 
 
-def measured_prefix_cache(verbose=True):
+def measured_prefix_cache(verbose=True, sched="work_queue"):
     """Prefix cache on vs off: one request publishes a 48-token system
     prompt, then a wave of requests sharing it arrives. Weight-only +
     calibrated kv_range (the parity regime) keeps greedy output
@@ -323,7 +329,7 @@ def measured_prefix_cache(verbose=True):
         eng = Engine(cfg, qparams, qc, EngineConfig(
             max_batch=6, num_pages=128, page_size=8, max_pages_per_seq=32,
             prefill_chunk_tokens=24, kv_range=4.0,
-            prefix_cache=(mode == "on")))
+            prefix_cache=(mode == "on"), attention_schedule=sched))
         t0 = time.time()
         eng.add_request(0, prefix + suffixes[0], 8)
         eng.run(max_steps=200)          # publisher completes → pages cached
@@ -358,12 +364,12 @@ def measured_prefix_cache(verbose=True):
     return results
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, sched: str = "work_queue"):
     t0 = time.time()
     if smoke:
         print("== fig11 --smoke: chunked vs whole-prompt prefill "
               "(tiny model, CPU) ==")
-        prefill = measured_prefill_modes()
+        prefill = measured_prefill_modes(sched=sched)
         c, w = prefill["chunked"], prefill["whole"]
         assert c["peak_fp_tokens"] < w["peak_fp_tokens"], (
             "chunked prefill must bound the fp activation footprint")
@@ -371,7 +377,7 @@ def main(smoke: bool = False):
             "decode must interleave with chunked long-prompt prefill")
         print("== fig11 --smoke: unified vs split step (tiny model, "
               "CPU) ==")
-        step = measured_unified_vs_split()
+        step = measured_unified_vs_split(sched=sched)
         dt = time.time() - t0
         u, s = step["unified"], step["split"]
         assert u["forwards"] == u["steps"], (
@@ -386,7 +392,7 @@ def main(smoke: bool = False):
             "unified step grossly slower than the split baseline")
         print("== fig11 --smoke: prefix cache on vs off (tiny model, "
               "CPU) ==")
-        px = measured_prefix_cache()
+        px = measured_prefix_cache(sched=sched)
         dt = time.time() - t0
         on, off = px["on"], px["off"]
         # counters, not wall-clock: cache hits must exist, prefill chunk
@@ -421,16 +427,16 @@ def main(smoke: bool = False):
     print("--- in/out 128/128 ---")
     rel_short = derived_table(128, 128)
     print("\n== measured engine (tiny model, equal page-byte budget) ==")
-    meas = measured_engine()
+    meas = measured_engine(sched=sched)
     print("\n== measured decode path: gather vs paged (tiny model) ==")
-    paths = measured_gather_vs_paged()
+    paths = measured_gather_vs_paged(sched=sched)
     print("\n== measured prefill path: chunked vs whole-prompt "
           "(tiny model) ==")
-    prefill = measured_prefill_modes()
+    prefill = measured_prefill_modes(sched=sched)
     print("\n== measured step structure: unified vs split (tiny model) ==")
-    step = measured_unified_vs_split()
+    step = measured_unified_vs_split(sched=sched)
     print("\n== measured prefix cache: on vs off (tiny model) ==")
-    px = measured_prefix_cache()
+    px = measured_prefix_cache(sched=sched)
     dt = time.time() - t0
     mean_long = float(np.mean([r["W4AxKV4"] for r in rel_long.values()]))
     mean_short = float(np.mean([r["W4AxKV4"] for r in rel_short.values()]))
@@ -456,4 +462,9 @@ if __name__ == "__main__":
                     help="CI: only the engine runs — chunked-vs-whole "
                          "prefill (d), unified-vs-split step (e), and "
                          "prefix cache on-vs-off (f)")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--attention-schedule", default="work_queue",
+                    choices=["work_queue", "dense"],
+                    help="paged-attention grid schedule for every "
+                         "measured engine part (fig10 ablates the two)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, sched=args.attention_schedule)

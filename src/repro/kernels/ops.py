@@ -34,6 +34,8 @@ __all__ = [
     "kv4_decode_attention",
     "paged_kv4_decode_attention",
     "paged_kv4_prefill_attention",
+    "paged_kv4_decode_attention_wq",
+    "paged_kv4_prefill_attention_wq",
     "act_quant",
     "default_impl",
 ]
@@ -224,6 +226,71 @@ def paged_kv4_prefill_attention(
         q, k_new, v_new, k_pool, k_scale, k_zero,
         v_pool, v_scale, v_zero, block_tables, ctx_lens, q_lens,
         interpret=interp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Work-queue (Stream-K) paged attention: flat descriptors + split-KV combine
+# ---------------------------------------------------------------------------
+
+def paged_kv4_decode_attention_wq(
+    q: jax.Array,             # [B, Hq, D]
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8
+    k_scale: jax.Array,       # [Hkv, 1, D] or [B, Hkv, 1, D]
+    k_zero: jax.Array,
+    v_pool: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    work_items: jax.Array,    # [W, 4] int32 (row, phys_page, count, kind)
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Work-queue decode attention: the grid walks flat ``(seq, kv_head,
+    page)`` descriptors covering only real pages (Stream-K one-to-many
+    binding), each emitting a partial flash state merged by the split-KV
+    combine — no ``B × max_npages`` padding rectangle. Descriptors come
+    from ``serving.kv_cache.build_work_queue``."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return R.paged_kv4_decode_attention_wq_ref(
+            q, k_pool, k_scale, k_zero, v_pool, v_scale, v_zero,
+            work_items,
+        )
+    return PK.paged_kv4_decode_attention_wq(
+        q, k_pool, k_scale, k_zero, v_pool, v_scale, v_zero,
+        work_items, interpret=interp,
+    )
+
+
+def paged_kv4_prefill_attention_wq(
+    q: jax.Array,             # [B, C, Hq, D] — one prefill chunk's queries
+    k_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk keys
+    v_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk values
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8
+    k_scale: jax.Array,       # [Hkv, 1, D]
+    k_zero: jax.Array,
+    v_pool: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    work_items: jax.Array,    # [W, 4] int32 (row, phys_page, count, kind)
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Work-queue chunked-prefill attention: same semantics as
+    ``paged_kv4_prefill_attention`` (rows past a row's q_len are padding
+    garbage — mask outside) but scheduled over flat work items — history
+    pages AND the per-row causal fp chunk are uniform entries in one
+    divisible pool, so a ragged batch's grid is Σ real work, not
+    ``B × (max_npages + 1)``."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return R.paged_kv4_prefill_attention_wq_ref(
+            q, k_new, v_new, k_pool, k_scale, k_zero,
+            v_pool, v_scale, v_zero, work_items,
+        )
+    return PK.paged_kv4_prefill_attention_wq(
+        q, k_new, v_new, k_pool, k_scale, k_zero,
+        v_pool, v_scale, v_zero, work_items, interpret=interp,
     )
 
 

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantizer as Q
-from repro.kernels.kv4_attention import NEG_INF
+from repro.kernels.kv4_attention import NEG_INF, _unpack_nibbles_f32
+from repro.kernels.paged_attention import combine_work_partials
 
 __all__ = [
     "w4a4_matmul_ref",
@@ -24,6 +25,8 @@ __all__ = [
     "kv4_decode_attention_ref",
     "paged_kv4_decode_attention_ref",
     "paged_kv4_prefill_attention_ref",
+    "paged_kv4_decode_attention_wq_ref",
+    "paged_kv4_prefill_attention_wq_ref",
     "act_quant_ref",
 ]
 
@@ -259,6 +262,141 @@ def paged_kv4_prefill_attention_ref(
     out = jnp.einsum("bhgct,bhtd->bhgcd", p.astype(compute_dtype), vals,
                      preferred_element_type=jnp.float32)
     out = jnp.moveaxis(out, 3, 1)                # [B, C, Hkv, G, D]
+    return out.reshape(b, c, hq, d)
+
+
+def _wq_item_pages(pool, pages, heads):
+    """Gather each work item's page for its kv head → [W, ps, D/2]."""
+    return jax.vmap(lambda p, h: pool[p, :, h])(pages, heads)
+
+
+def paged_kv4_decode_attention_wq_ref(
+    q: jax.Array,             # [B, Hq, D] — decode-step queries
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] (or [B, Hkv, 1, D]) f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    work_items: jax.Array,    # [W, 4] int32 (row, phys_page, count, kind)
+) -> jax.Array:
+    """Oracle for the work-queue decode kernel: compute every item's
+    partial flash triple in one vectorized pass, then run the SAME
+    split-KV combine the Pallas wrapper uses. The descriptor walk here
+    *defines* the schedule's semantics — Σ real pages of work, combined
+    by row segment — independent of how the grid binds items to cores."""
+    b, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hkv
+    nrows = b * hkv
+    desc = jnp.asarray(work_items, jnp.int32)
+    rcl = jnp.minimum(desc[:, 0], nrows - 1)
+    heads = rcl % hkv
+    counts = desc[:, 2]
+
+    def bcast(s):
+        return jnp.broadcast_to(s, (b, hkv, 1, d))
+
+    sm = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    qt = (qg * bcast(k_scale) * sm).reshape(nrows, g, d)
+    c = jnp.sum(qt.reshape(b, hkv, g, d) * bcast(k_zero),
+                axis=-1, keepdims=True).reshape(nrows, g, 1)
+
+    nk = _unpack_nibbles_f32(_wq_item_pages(k_pool, desc[:, 1], heads))
+    nv = _unpack_nibbles_f32(_wq_item_pages(v_pool, desc[:, 1], heads))
+    s = jnp.einsum("wgd,wpd->wgp", qt[rcl], nk,
+                   preferred_element_type=jnp.float32) - c[rcl]
+    pos = jnp.arange(ps)[None, None, :]
+    s = jnp.where(pos < counts[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)             # [W, G, 1]
+    p = jnp.exp(s - m)
+    acc = jnp.einsum("wgp,wpd->wgd", p, nv,
+                     preferred_element_type=jnp.float32)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+
+    comb = combine_work_partials(acc, l, m, desc[:, 0], nrows)
+    sv = bcast(v_scale)
+    zv = bcast(v_zero)
+    out = sv * comb.reshape(b, hkv, g, d) - sv * zv
+    return out.reshape(b, hq, d)
+
+
+def paged_kv4_prefill_attention_wq_ref(
+    q: jax.Array,             # [B, C, Hq, D] — one prefill chunk's queries
+    k_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk keys
+    v_new: jax.Array,         # [B, C, Hkv, D] fp in-flight chunk values
+    k_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical K pages
+    k_scale: jax.Array,       # [Hkv, 1, D] f32
+    k_zero: jax.Array,        # [Hkv, 1, D] f32
+    v_pool: jax.Array,        # [P, ps, Hkv, D/2] uint8 physical V pages
+    v_scale: jax.Array,       # [Hkv, 1, D] f32
+    v_zero: jax.Array,        # [Hkv, 1, D] f32
+    work_items: jax.Array,    # [W, 4] int32 (row, phys_page, count, kind)
+) -> jax.Array:
+    """Oracle for the work-queue prefill kernel: per-item partials for
+    both item kinds (int4 history page / causal fp chunk), selected by
+    ``kind``, then the shared split-KV combine. Rows past a row's q_len
+    are padding garbage — mask outside. Returns [B, C, Hq, D] f32."""
+    b, c, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = hq // hkv
+    cg = c * g
+    nrows = b * hkv
+    desc = jnp.asarray(work_items, jnp.int32)
+    rcl = jnp.minimum(desc[:, 0], nrows - 1)
+    heads = rcl % hkv
+    counts = desc[:, 2]
+    kinds = desc[:, 3]
+
+    sm = 1.0 / jnp.sqrt(jnp.float32(d))
+    qg = jnp.moveaxis(q.reshape(b, c, hkv, g, d).astype(jnp.float32), 1, 2)
+    ksb = jnp.broadcast_to(k_scale, (hkv, 1, d)).reshape(1, hkv, 1, 1, d)
+    kzb = jnp.broadcast_to(k_zero, (hkv, 1, d)).reshape(1, hkv, 1, 1, d)
+    qt = qg * ksb * sm
+    cterm = jnp.sum(qt * kzb, axis=-1, keepdims=True)
+    qt2 = qt.reshape(nrows, cg, d)
+    c2 = cterm.reshape(nrows, cg, 1)
+    qs2 = (qg * sm).reshape(nrows, cg, d)
+    kn2 = k_new.astype(jnp.float32).swapaxes(1, 2).reshape(nrows, c, d)
+    vn2 = v_new.astype(jnp.float32).swapaxes(1, 2).reshape(nrows, c, d)
+    vsb = jnp.broadcast_to(v_scale, (hkv, 1, d))[heads]     # [W, 1, D]
+    vzb = jnp.broadcast_to(v_zero, (hkv, 1, d))[heads]
+
+    # --- kind 0: int4 history pages (V affine folded per item) ---
+    nk = _unpack_nibbles_f32(_wq_item_pages(k_pool, desc[:, 1], heads))
+    nv = _unpack_nibbles_f32(_wq_item_pages(v_pool, desc[:, 1], heads))
+    s_h = jnp.einsum("wgd,wpd->wgp", qt2[rcl], nk,
+                     preferred_element_type=jnp.float32) - c2[rcl]
+    pos = jnp.arange(ps)[None, None, :]
+    s_h = jnp.where(pos < counts[:, None, None], s_h, NEG_INF)
+    m_h = jnp.max(s_h, axis=-1, keepdims=True)         # [W, CG, 1]
+    p_h = jnp.exp(s_h - m_h)
+    l_h = jnp.sum(p_h, axis=-1, keepdims=True)
+    pv = jnp.einsum("wgp,wpd->wgd", p_h, nv,
+                    preferred_element_type=jnp.float32)
+    acc_h = pv * vsb - l_h * (vsb * vzb)
+
+    # --- kind 1: the row's in-flight fp chunk, causal over count ---
+    s_c = jnp.einsum("wgd,wcd->wgc", qs2[rcl], kn2[rcl],
+                     preferred_element_type=jnp.float32)
+    qi = (jnp.arange(cg) // g)[None, :, None]
+    kj = jnp.arange(c)[None, None, :]
+    s_c = jnp.where((kj <= qi) & (kj < counts[:, None, None]), s_c, NEG_INF)
+    m_c = jnp.max(s_c, axis=-1, keepdims=True)
+    p_c = jnp.exp(s_c - m_c)
+    l_c = jnp.sum(p_c, axis=-1, keepdims=True)
+    acc_c = jnp.einsum("wgc,wcd->wgd", p_c, vn2[rcl],
+                       preferred_element_type=jnp.float32)
+
+    sel = (kinds != 0)[:, None, None]
+    acc = jnp.where(sel, acc_c, acc_h)
+    l = jnp.where(sel, l_c, l_h)
+    m = jnp.where(sel, m_c, m_h)
+
+    out = combine_work_partials(acc, l, m, desc[:, 0], nrows)
+    out = out.reshape(b, hkv, c, g, d)
+    out = jnp.moveaxis(out, 2, 1)                      # [B, C, Hkv, G, D]
     return out.reshape(b, c, hq, d)
 
 

@@ -5,10 +5,13 @@ Requests go through ``Engine.submit`` with per-request
 :class:`SamplingParams`; ``--stream`` prints tokens as ``step()`` emits
 them (the ``engine.events()`` queue); ``--prefix-cache`` toggles
 refcounted shared-prompt page reuse (``--shared-prefix`` controls how
-many prompt tokens the synthetic trace shares); ``--abort-every N``
-cancels every Nth request mid-flight to exercise the abort path. The
-end-of-run summary reports throughput, prefix-cache hit rate, and
-aborted counts.
+many prompt tokens the synthetic trace shares, ``--prefix-cache-max-
+bytes`` caps the reclaimable LRU); ``--attention-schedule`` picks the
+paged-attention grid schedule (Stream-K work queue vs dense baseline);
+``--abort-every N`` cancels every Nth request mid-flight to exercise
+the abort path. The end-of-run summary reports throughput, prefix-cache
+hit rate + eviction counters, schedule work/grid counters, and aborted
+counts.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
@@ -54,8 +57,16 @@ def main():
                     help="unified: ONE forward/step over decode rows + "
                          "prompt chunks (bucketed shapes); split: "
                          "separate prefill + decode forwards (baseline)")
+    ap.add_argument("--attention-schedule", default="work_queue",
+                    choices=["work_queue", "dense"],
+                    help="paged-attention grid schedule: flat Stream-K "
+                         "work queue with split-KV combine (default) or "
+                         "the dense (B·Hkv, max_npages) baseline")
     ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
                     help="refcounted shared-prompt page reuse")
+    ap.add_argument("--prefix-cache-max-bytes", type=int, default=0,
+                    help="byte cap on the reclaimable prefix-page LRU "
+                         "(0 = unlimited); evictions show in the summary")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prompt tokens shared by every request (a "
                          "synthetic system prompt — the prefix-cache "
@@ -91,7 +102,9 @@ def main():
         prefill_mode=args.prefill_mode,
         prefill_chunk_tokens=args.prefill_chunk,
         unified_step=(args.step_mode == "unified"),
-        prefix_cache=(args.prefix_cache == "on")))
+        prefix_cache=(args.prefix_cache == "on"),
+        attention_schedule=args.attention_schedule,
+        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None)))
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -149,7 +162,17 @@ def main():
           flush=True)
     print(f"[cache] prefix hit rate {hit_rate:.0%} "
           f"({eng.prefix_hit_tokens}/{prompt_tokens} prompt tokens served "
-          f"from published pages); aborted={eng.aborted_count}", flush=True)
+          f"from published pages); evicted={eng.cache.prefix_evicted_pages} "
+          f"pages; reclaimable={eng.cache.prefix_reclaimable_bytes}B; "
+          f"aborted={eng.aborted_count}", flush=True)
+    if eng.attn_forwards:
+        waste = eng.attn_grid_items - eng.attn_work_items
+        dense_waste = eng.attn_dense_grid_items - eng.attn_work_items
+        print(f"[sched] {args.attention_schedule}: "
+              f"{eng.attn_work_items} attention work items over "
+              f"{eng.attn_forwards} forwards; grid={eng.attn_grid_items} "
+              f"(waste {waste}; dense rectangle would waste "
+              f"{dense_waste})", flush=True)
     for r in finished[:4]:
         print(f"  req {r.request_id}: {r.state.value:9s} "
               f"{r.generated[:12]}…", flush=True)

@@ -43,14 +43,29 @@ stream instead of alternating prefill and decode passes (half the kernel
 launches and weight traffic per step).
 
 The unified forward is jitted over **bucketed shapes**: the packed
-layout ``(nseq, cmax, ttot, npages)`` is rounded up to powers of two, so
-steady-state ragged traffic hits the jit cache instead of retracing
-every ``(nseq, cmax, ttot)`` combination (the dominant cost of the CPU
+layout ``(nseq, cmax, ttot)`` plus the attention-schedule dimension
+(work-item count under ``attention_schedule="work_queue"``, ``npages``
+under ``"dense"``) is rounded up to powers of two, so steady-state
+ragged traffic hits the jit cache instead of retracing every
+``(nseq, cmax, ttot)`` combination (the dominant cost of the CPU
 smoke engine). Padding tokens carry out-of-range scatter destinations
 (dropped writes) and zero-length rows (masked in attention), so padding
 is semantically inert. ``Engine.trace_count`` counts distinct compiled
 forward variants — it plateaus after warmup; ``forward_calls`` proves
 the one-forward-per-step invariant.
+
+**Attention schedule** (COMET §4.4's SM-balance pillar, on TPU). The
+default ``attention_schedule="work_queue"`` runs paged attention over a
+flat Stream-K work pool: the host flattens the batch's REAL pages into
+``(row, page, count, kind)`` descriptors (``PagedKV4Cache.
+work_queue_np``), the kernel grid walks them uniformly (grid ≈ Σ pages
+— a long row's history parallelizes across lanes, short rows pay only
+their own pages), and a split-KV log-sum-exp combine merges the partial
+flash states. ``"dense"`` keeps the ``(B·Hkv, max_npages)`` rectangle
+as the measured baseline. Counters ``attn_work_items`` (real work,
+schedule-invariant), ``attn_grid_items`` (launched grid) and
+``attn_dense_grid_items`` (the rectangle the dense schedule pays) make
+the padding waste measurable — fig10's ragged ablation asserts them.
 
 Prefill is chunked and ragged: the scheduler plans up to
 ``prefill_chunk_tokens`` prompt tokens per step (budget shared with the
@@ -137,6 +152,12 @@ class EngineConfig:
     #                                  False → split-step fig11 baseline
     prefix_cache: bool = True        # publish/reuse shared prompt pages
     #                                  (refcounted; chunked prefill only)
+    attention_schedule: str = "work_queue"  # "work_queue" (Stream-K flat
+    #                                  descriptors + split-KV combine) |
+    #                                  "dense" ((B·Hkv, max_npages) grid —
+    #                                  the measured fig10 baseline)
+    prefix_cache_max_bytes: Optional[int] = None  # byte cap on the
+    #                                  reclaimable prefix-page LRU
 
     def __post_init__(self):
         if self.decode_attention not in ("paged", "gather"):
@@ -149,6 +170,10 @@ class EngineConfig:
                 f"{self.prefill_mode!r}")
         if self.prefill_chunk_tokens < 1:
             raise ValueError("prefill_chunk_tokens must be >= 1")
+        if self.attention_schedule not in ("work_queue", "dense"):
+            raise ValueError(
+                f"attention_schedule must be 'work_queue' or 'dense', "
+                f"got {self.attention_schedule!r}")
 
     @property
     def unified(self) -> bool:
@@ -181,7 +206,8 @@ class Engine:
             PagedKV4Config(
                 num_pages=ecfg.num_pages, page_size=ecfg.page_size,
                 max_seqs=ecfg.max_batch * 2,
-                max_pages_per_seq=ecfg.max_pages_per_seq),
+                max_pages_per_seq=ecfg.max_pages_per_seq,
+                reclaimable_max_bytes=ecfg.prefix_cache_max_bytes),
             num_layer_slots=cfg.num_layers,
             kv_range=ecfg.kv_range)
         self.sched = Scheduler(ecfg.max_batch, ecfg.max_batch * 2)
@@ -203,6 +229,16 @@ class Engine:
         self.prefix_hit_tokens = 0
         self.prefill_tokens = 0
         self.aborted_count = 0
+        # attention-schedule counters (fig10 measured ablation): real
+        # work items (Σ real pages + chunk items, per kv head — equal
+        # under both schedules), grid items actually launched (dense:
+        # the padded (B·Hkv)·(npages+1) rectangle; work_queue: the
+        # pow-2-bucketed flat count), the dense-equivalent grid for the
+        # same forwards, and how many attention forwards contributed
+        self.attn_work_items = 0
+        self.attn_grid_items = 0
+        self.attn_dense_grid_items = 0
+        self.attn_forwards = 0
         self._fwd_shapes: set = set()
         self._gather_bcast: dict = {}      # bsz → broadcast scales/zeros
         # donate the pool buffers so the traced KV scatter updates them
@@ -211,8 +247,8 @@ class Engine:
         # the accelerator backends where it is honored
         self.donate_pools = jax.default_backend() in ("tpu", "gpu")
         self._fwd = jax.jit(
-            self._unified_forward, static_argnums=(0, 1),
-            donate_argnums=(3, 4) if self.donate_pools else ())
+            self._unified_forward, static_argnums=(0, 1, 2),
+            donate_argnums=(4, 5) if self.donate_pools else ())
         self._sample_fns: dict = {}        # kmax → jitted batched sampler
         self._by_id: dict[int, Request] = {}
         self._next_id = 0
@@ -296,6 +332,23 @@ class Engine:
     def result(self, handle) -> Optional[Request]:
         """The request's current state (its final state once terminal)."""
         return self._resolve(handle)
+
+    def release(self, handle) -> bool:
+        """Drop a TERMINAL request's retained state — its entry in the
+        id map, its slot in ``sched.finished``, and its event log — so
+        a long-running server's memory scales with in-flight work, not
+        lifetime traffic. Call after consuming ``result``/``stream``;
+        the request_id becomes immediately reusable. Returns False for
+        unknown or still-in-flight requests (aborting first is the way
+        to drop those)."""
+        req = self._resolve(handle)
+        if req is None or not req.state.terminal:
+            return False
+        self.sched.release(req)
+        self._by_id.pop(req.request_id, None)
+        req.events.clear()
+        req.on_event = None
+        return True
 
     # ----------------------------------------------------- batch-compat API
 
@@ -579,8 +632,6 @@ class Engine:
         cb = _bucket(cmax)
         npb = min(_bucket(self.cache.pages_needed(max(int(starts.max()), 1))),
                   self.cache.pcfg.max_pages_per_seq)
-        tables = np.zeros((nb, npb), np.int32)
-        tables[:nseq] = self.cache.block_tables_np(slots, npb)
 
         pf_tokens = int(sum(t for _, _, t in plan))
         self.peak_prefill_fp_tokens = max(self.peak_prefill_fp_tokens,
@@ -591,8 +642,35 @@ class Engine:
         # rows either) → the causal fp flash path, exactly like the
         # split baseline's fast path (its own static trace variant)
         no_history = int(starts.max()) == 0
+        schedule = self.ecfg.attention_schedule
+        hkv = self.cfg.num_kv_heads
+        wq = schedule == "work_queue" and not no_history
+        if wq:
+            # flat Stream-K descriptors over the rows' REAL pages (+ one
+            # chunk item per row), pow-2 padded — the work count replaces
+            # npages as the attention dimension of the jit-cache key, so
+            # the dense block tables collapse to a constant-shape dummy.
+            # The padding sentinel must clear the BUCKETED row count:
+            # rows [nseq, nb) are live (qlen-0) segments in the combine
+            desc_np = self.cache.work_queue_np(slots, starts, takes,
+                                               pad_row=nb * hkv)
+            tables = np.zeros((nb, 1), np.int32)
+        else:
+            desc_np = np.zeros((8, 4), np.int32)
+            tables = np.zeros((nb, npb), np.int32)
+            tables[:nseq] = self.cache.block_tables_np(slots, npb)
+        if not no_history:
+            # fig10 measured-ablation counters: the real work is the
+            # same under both schedules; the launched grid is not
+            self.attn_forwards += 1
+            self.attn_work_items += int(
+                hkv * (np.sum((starts + self.ecfg.page_size - 1)
+                              // self.ecfg.page_size) + nseq))
+            self.attn_dense_grid_items += nb * hkv * (npb + 1)
+            self.attn_grid_items += (desc_np.shape[0] if wq
+                                     else nb * hkv * (npb + 1))
         logits, k_pool, v_pool = self._fwd(
-            cb, no_history, self.params, self.cache.k_pool,
+            cb, no_history, schedule, self.params, self.cache.k_pool,
             self.cache.v_pool,
             jnp.asarray(_pad_to(tokens, tb)),
             jnp.asarray(_pad_to(tok_pos, tb)),
@@ -611,7 +689,8 @@ class Engine:
             jnp.asarray(tables),
             jnp.asarray(_pad_to(starts, nb)),          # ctx per row
             jnp.asarray(_pad_to(takes, nb)),           # qlens per row
-            jnp.asarray(_pad_to(cum[1:] - 1, nb)))     # last token per row
+            jnp.asarray(_pad_to(cum[1:] - 1, nb)),     # last token per row
+            jnp.asarray(desc_np))                      # wq work items
         self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
         logits = np.asarray(logits)
 
@@ -639,16 +718,19 @@ class Engine:
         for (_, r, _), tok in zip(need, toks):
             self._record_token(r, tok)
 
-    def _unified_forward(self, cmax: int, no_history: bool, params,
-                         k_pool, v_pool, tokens, positions, pages, offs,
-                         tseq, toff, dq_mask, block_tables, ctx, qlens,
-                         last_idx):
+    def _unified_forward(self, cmax: int, no_history: bool, schedule: str,
+                         params, k_pool, v_pool, tokens, positions, pages,
+                         offs, tseq, toff, dq_mask, block_tables, ctx,
+                         qlens, last_idx, work_items):
         """The jitted unified forward (one trace per shape bucket).
 
         tokens/positions/pages/offs/tseq/toff/dq_mask: [Tb] int32 packed
-        layout; block_tables: [Nb, NPb]; ctx/qlens/last_idx: [Nb].
-        Returns (logits [Nb, V] f32, k_pool, v_pool) — pools updated
-        with the step's quantized KV."""
+        layout; block_tables: [Nb, NPb]; ctx/qlens/last_idx: [Nb];
+        work_items: [Wb, 4] flat Stream-K descriptors (the attention
+        shape key under ``schedule="work_queue"`` — block_tables is a
+        [Nb, 1] dummy there; under "dense" the roles swap). Returns
+        (logits [Nb, V] f32, k_pool, v_pool) — pools updated with the
+        step's quantized KV."""
         self.trace_count += 1          # traced body: fires once per compile
         cfg = self.cfg
         cache = self.cache
@@ -686,6 +768,12 @@ class Engine:
                     # are causally masked, so plain fp flash is exact
                     out = ATT.flash_attention(pad(q), pad(k_att),
                                               pad(v_att), causal=True)
+                elif schedule == "work_queue":
+                    out = ops.paged_kv4_prefill_attention_wq(
+                        pad(q), pad(k_att), pad(v_att),
+                        k_pool[li], cache.k_scale, cache.k_zero,
+                        v_pool[li], cache.v_scale, cache.v_zero,
+                        work_items, impl=self.quant.impl)
                 else:
                     out = ops.paged_kv4_prefill_attention(
                         pad(q), pad(k_att), pad(v_att),
@@ -858,10 +946,18 @@ class Engine:
             for (_, r), tok in zip(finished, toks):
                 self._record_token(r, tok)
 
-    def _attend_paged(self, li: int, q, block_tables, lengths):
+    def _attend_paged(self, li: int, q, block_tables, lengths,
+                      work_items=None):
         """One kernel call for the whole decode batch — block tables in,
-        no per-sequence materialization."""
+        no per-sequence materialization. With ``work_items`` set (the
+        work-queue schedule) the flat descriptors replace the dense
+        block-table walk."""
         cache = self.cache
+        if work_items is not None:
+            return ops.paged_kv4_decode_attention_wq(
+                q[:, 0], cache.k_pool[li], cache.k_scale, cache.k_zero,
+                cache.v_pool[li], cache.v_scale, cache.v_zero,
+                work_items, impl=self.quant.impl)
         return ops.paged_kv4_decode_attention(
             q[:, 0], cache.k_pool[li], cache.k_scale, cache.k_zero,
             cache.v_pool[li], cache.v_scale, cache.v_zero,
@@ -900,11 +996,32 @@ class Engine:
         # destinations for the appends are resolved on the host ONCE and
         # reused by every layer's scatter (was: one block-table lookup +
         # validation per layer — num_layers host syncs per step).
-        block_tables = self.cache.block_tables_device(slots, max_len)
         lengths = jnp.asarray(lengths_np + 1, jnp.int32)
         pages, offs = self.cache.token_dests(slots, lengths_np)
         self.forward_calls += 1
-        self._count_trace(("decode", bsz, self.cache.pages_needed(max_len)))
+        hkv = self.cfg.num_kv_heads
+        npages = self.cache.pages_needed(max_len)
+        work_items = None
+        block_tables = None
+        if paged and self.ecfg.attention_schedule == "work_queue":
+            # the decode batch attends over ctx + the token written this
+            # step — descriptors cover exactly those real pages, and the
+            # dense block tables never ship to the device
+            desc_np = self.cache.work_queue_np(slots, lengths_np + 1)
+            work_items = jnp.asarray(desc_np)
+            self.attn_grid_items += desc_np.shape[0]
+            self._count_trace(("decode", bsz, desc_np.shape[0]))
+        else:
+            if paged:
+                block_tables = self.cache.block_tables_device(
+                    slots, max_len)
+                self.attn_grid_items += bsz * hkv * npages
+            self._count_trace(("decode", bsz, npages))
+        if paged:
+            self.attn_forwards += 1
+            self.attn_work_items += int(hkv * np.sum(
+                (lengths_np + self.ecfg.page_size) // self.ecfg.page_size))
+            self.attn_dense_grid_items += bsz * hkv * npages
         with self.lm._ctx():
             x = self.lm._embed(self.params, last)
             positions = jnp.asarray(lengths_np)[:, None]
@@ -917,7 +1034,8 @@ class Engine:
                 # the pools via block tables — one kernel call per layer
                 self.cache.scatter_tokens(li, pages, offs, k, v)
                 if paged:
-                    out = self._attend_paged(li, q, block_tables, lengths)
+                    out = self._attend_paged(li, q, block_tables, lengths,
+                                             work_items)
                 else:
                     out = self._attend_gather(li, q, slots, max_len, lengths)
                 out = out.reshape(bsz, 1, cfg.q_dim).astype(x.dtype)

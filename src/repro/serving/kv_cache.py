@@ -43,6 +43,22 @@ cached (a future `match_prefix` revives them) but counted in
 `pages_free` and evicted LRU-first the moment an allocation would
 otherwise fail, BEFORE any scheduler preemption fires.
 
+**Work-queue schedule (host side).** `build_work_queue` /
+`work_queue_np` flatten a ragged batch's real pages into the Stream-K
+descriptor array the work-queue attention kernels walk: one item per
+``(seq, kv_head, page)`` covering only mapped history (plus one
+in-flight-chunk item per row), padded to a power-of-two count so the
+kernel grid is a uniform pool of work instead of the dense
+``(B·Hkv, max_npages)`` rectangle that serializes long rows and pads
+short ones (see `kernels/paged_attention.py` for the device side).
+
+The reclaimable prefix LRU can be capped by bytes
+(``reclaimable_max_bytes``): publishing beyond the cap evicts
+oldest-first, `prefix_evicted_pages` counts every eviction (cap or
+allocation pressure), and `prefix_reclaimable_bytes` reports the
+resident overhang — the observability a long-running server needs to
+size the cache.
+
 The legacy gather path (`gather_kv`) that materializes a sequence's
 packed KV contiguously (a per-token O(context) copy) is retained only as
 the benchmark baseline and for tests.
@@ -61,7 +77,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
-__all__ = ["PagedKV4Config", "PagedKV4Cache"]
+__all__ = ["PagedKV4Config", "PagedKV4Cache", "build_work_queue"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +86,88 @@ class PagedKV4Config:
     page_size: int = 64
     max_seqs: int = 64
     max_pages_per_seq: int = 128
+    reclaimable_max_bytes: Optional[int] = None  # byte cap on the prefix LRU
+
+
+def build_work_queue(block_tables, ctx_lens, page_size: int,
+                     num_kv_heads: int, q_lens=None,
+                     min_items: int = 8,
+                     pad_row: Optional[int] = None) -> np.ndarray:
+    """Flatten a ragged batch into Stream-K work descriptors.
+
+    → ``[W, 4]`` int32 rows ``(row, phys_page, count, kind)``:
+
+    * ``row``  — output-row segment id ``seq_idx · Hkv + kv_head`` the
+      item's partial belongs to (the split-KV combine's segment key);
+    * ``phys_page`` — physical pool page (kind 0) — the kernel's
+      BlockSpec index map reads it directly, no block-table walk;
+    * ``count`` — valid tokens in the page (kind 0: ``min(ps, ctx −
+      page_start)``) or the row's causal chunk length (kind 1);
+    * ``kind`` — 0: int4 history page, 1: in-flight fp chunk.
+
+    One item per ``(seq, kv_head, real page)`` — pages past ``ctx_lens``
+    simply don't exist, so Σ items ≈ Σ real pages, not ``B × max_pages``
+    — plus, when ``q_lens`` is given, one chunk item per row with
+    ``q_lens > 0``. Items are ordered row-major so consecutive grid
+    steps reuse the row's query block (one-to-many tile binding).
+
+    ``W`` is padded to a power of two (≥ ``min_items``); padding rows
+    carry the sentinel ``pad_row`` (default ``B·Hkv`` — pass the
+    *bucketed* row count when the consumer pads the batch beyond B, so
+    the sentinel stays out of every live segment) and ``count = 0`` —
+    the combine's segment scatter drops them.
+    """
+    tables = np.atleast_2d(np.asarray(block_tables))
+    ctx = np.atleast_1d(np.asarray(ctx_lens)).astype(np.int64)
+    b, ps, hkv = ctx.shape[0], page_size, num_kv_heads
+    # fully vectorized (this runs every engine step): flatten each
+    # sequence's real pages in seq order, scatter the optional chunk
+    # item behind them, then tile the per-seq stream across kv heads
+    npg = -(-ctx // ps)                              # real pages per seq
+    has_chunk = (np.zeros(b, np.int64) if q_lens is None else
+                 (np.atleast_1d(np.asarray(q_lens)) > 0).astype(np.int64))
+    qls = (None if q_lens is None
+           else np.atleast_1d(np.asarray(q_lens)).astype(np.int64))
+    seq_of_pg = np.repeat(np.arange(b), npg)
+    pg_off = np.concatenate([[0], np.cumsum(npg)])
+    pg_idx = np.arange(pg_off[-1]) - pg_off[seq_of_pg]
+    pages_flat = tables[seq_of_pg, pg_idx]
+    if (pages_flat < 0).any():
+        bad = np.unique(seq_of_pg[pages_flat < 0]).tolist()
+        raise IndexError(
+            f"work queue over unmapped page(s) for seq(s) {bad} — "
+            "grow capacity first")
+    counts_flat = np.minimum(ps, ctx[seq_of_pg] - ps * pg_idx)
+    # per-seq item streams: pages first, then the chunk item (if any)
+    n_per_seq = npg + has_chunk
+    off = np.concatenate([[0], np.cumsum(n_per_seq)])
+    tot = int(off[-1])
+    pages_c = np.zeros(tot, np.int64)
+    counts_c = np.zeros(tot, np.int64)
+    kinds_c = np.zeros(tot, np.int64)
+    pg_pos = off[seq_of_pg] + pg_idx
+    pages_c[pg_pos] = pages_flat
+    counts_c[pg_pos] = counts_flat
+    if qls is not None:
+        ch = np.nonzero(has_chunk)[0]
+        ch_pos = off[ch] + npg[ch]
+        counts_c[ch_pos] = qls[ch]
+        kinds_c[ch_pos] = 1
+    # tile across heads, row-major: block k = i·hkv + h replays seq i's
+    # stream, so consecutive grid steps share the row's query block
+    reps = np.repeat(n_per_seq, hkv)                 # items per (seq, head)
+    bs = np.cumsum(reps) - reps                      # flat block starts
+    within = np.arange(int(reps.sum())) - np.repeat(bs, reps)
+    src = np.repeat(off[np.repeat(np.arange(b), hkv)], reps) + within
+    w = max(len(src), 1)
+    wb = max(min_items, 1 << (w - 1).bit_length())
+    desc = np.zeros((wb, 4), np.int32)
+    desc[:, 0] = b * hkv if pad_row is None else pad_row
+    desc[:len(src), 0] = np.repeat(np.arange(b * hkv), reps)
+    desc[:len(src), 1] = pages_c[src]
+    desc[:len(src), 2] = counts_c[src]
+    desc[:len(src), 3] = kinds_c[src]
+    return desc
 
 
 class PagedKV4Cache:
@@ -113,6 +211,10 @@ class PagedKV4Cache:
         self.prefix_index: dict = {}
         self.page_key: dict = {}
         self._reclaimable: OrderedDict = OrderedDict()
+        # prefix-LRU observability: bytes one page pins in the pools
+        # (K + V across the layer stack) and lifetime eviction count
+        self.page_bytes = 2 * num_layer_slots * pcfg.page_size * hkv * (d // 2)
+        self.prefix_evicted_pages = 0
 
     # ------------------------------------------------------------- allocator
 
@@ -122,6 +224,21 @@ class PagedKV4Cache:
         ref==0 pages (evicted LRU-first on demand)."""
         return len(self.free_pages) + len(self._reclaimable)
 
+    @property
+    def prefix_reclaimable_bytes(self) -> int:
+        """Pool bytes pinned by published ref==0 pages (the LRU)."""
+        return len(self._reclaimable) * self.page_bytes
+
+    def _evict_reclaimable(self) -> Optional[int]:
+        """Drop the LRU reclaimable page's index entry; → page id."""
+        if not self._reclaimable:
+            return None
+        p, key = self._reclaimable.popitem(last=False)
+        del self.prefix_index[key]
+        del self.page_key[p]
+        self.prefix_evicted_pages += 1
+        return p
+
     def _acquire_page(self) -> Optional[int]:
         """Pop a free page, evicting the LRU reclaimable prefix page
         (and its index entry) if the free list is empty. Eviction runs
@@ -129,12 +246,10 @@ class PagedKV4Cache:
         once both pools are dry."""
         if self.free_pages:
             p = self.free_pages.pop()
-        elif self._reclaimable:
-            p, key = self._reclaimable.popitem(last=False)
-            del self.prefix_index[key]
-            del self.page_key[p]
         else:
-            return None
+            p = self._evict_reclaimable()
+            if p is None:
+                return None
         self.ref[p] = 1
         return p
 
@@ -150,9 +265,15 @@ class PagedKV4Cache:
             return                      # still shared
         key = self.page_key.get(p)
         if key is not None and self.prefix_index.get(key) == p:
-            # published: keep the content cached, evictable LRU-first
+            # published: keep the content cached, evictable LRU-first —
+            # unless the byte cap says the LRU is already full, in
+            # which case evict oldest-first down to the cap
             self._reclaimable[p] = key
             self._reclaimable.move_to_end(p)
+            cap = self.pcfg.reclaimable_max_bytes
+            while (cap is not None
+                   and self.prefix_reclaimable_bytes > cap):
+                self.free_pages.append(self._evict_reclaimable())
         else:
             self.free_pages.append(p)
 
@@ -423,6 +544,20 @@ class PagedKV4Cache:
             self.seq_len[s] += 1
 
     # -------------------------------------------------- block-table views
+
+    def work_queue_np(self, seq_ids, ctx_lens, q_lens=None,
+                      min_items: int = 8,
+                      pad_row: Optional[int] = None) -> np.ndarray:
+        """Stream-K work descriptors for these sequences' *real* pages
+        (see :func:`build_work_queue`): ``[W, 4]`` int32, W padded to a
+        power of two. ``ctx_lens`` is the paged history per row;
+        ``q_lens`` (optional) adds one in-flight-chunk item per row;
+        ``pad_row`` overrides the padding sentinel for bucketed
+        batches."""
+        return build_work_queue(
+            self.block_table[np.asarray(seq_ids)], ctx_lens,
+            self.pcfg.page_size, self.cfg.num_kv_heads, q_lens, min_items,
+            pad_row)
 
     def block_tables_np(self, seq_ids, npages: int) -> np.ndarray:
         """[B, npages] int32 host table with unmapped slots (-1) clamped

@@ -252,6 +252,15 @@ class Scheduler:
         self.finished.append(req)
         return True
 
+    def release(self, req: Request):
+        """Forget a terminal request (bounded retention): drop it from
+        ``finished`` so scheduler state scales with in-flight work, not
+        lifetime traffic. No-op if the request was already released."""
+        try:
+            self.finished.remove(req)
+        except ValueError:
+            pass
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)

@@ -5,6 +5,13 @@ multiple of page_size), GQA head ratios, and batch > 1 — the contract
 the gather-free serving hot path depends on. The prefill sweeps add
 ragged chunk lengths, zero-history sequences, and the fp-chunk/int4-
 history boundary the chunked prompt path relies on.
+
+The work-queue sweeps re-run every dense case through the flat
+Stream-K descriptor schedule (``build_work_queue`` → ``*_wq`` kernels
+→ split-KV combine) and require the result to match the DENSE oracle —
+the two grid schedules must be numerically interchangeable up to float
+reassociation, including the ragged dominant-long-row and qlen-0
+pad-row cases the unified engine's bucketed batches produce.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +20,8 @@ import pytest
 from repro.configs.base import get_smoke_config
 from repro.kernels import ops, ref
 from repro.layers.attention import flash_attention
-from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+from repro.serving.kv_cache import (PagedKV4Cache, PagedKV4Config,
+                                    build_work_queue)
 
 
 def make_paged(rng, b, hkv, d, ps, lengths, num_pages=None):
@@ -48,6 +56,7 @@ CASES = [
     (2, 8, 8, 128, 64, [100, 17]),       # MHA, len % ps != 0
     (4, 8, 2, 64, 128, [5, 130, 256, 200]),   # batch 4, big pages
     (3, 16, 4, 64, 64, [64, 1, 190]),    # GQA 4, len == 1 edge
+    (4, 8, 2, 64, 32, [300, 3, 2, 1]),   # one dominant long-context row
 ]
 
 
@@ -217,6 +226,98 @@ def test_prefill_last_row_matches_decode(rng):
         impl="pallas")
     np.testing.assert_allclose(np.asarray(o_pre)[:, 0], np.asarray(o_dec),
                                rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- work queue
+
+@pytest.mark.parametrize("b,hq,hkv,d,ps,lengths", CASES)
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_wq_decode_matches_dense_oracle(rng, b, hq, hkv, d, ps, lengths,
+                                        impl):
+    """The flat work-queue schedule == the dense oracle, and its work
+    count covers only real pages (≈ Σ pages, not B·max_npages)."""
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kp, ks, kz, vp, vs, vz, tbl, lens = make_paged(
+        rng, b, hkv, d, ps, lengths)
+    o_dense = ref.paged_kv4_decode_attention_ref(
+        q, kp, ks, kz, vp, vs, vz, tbl, lens)
+    desc = build_work_queue(np.asarray(tbl), lengths, ps, hkv)
+    o = ops.paged_kv4_decode_attention_wq(
+        q, kp, ks, kz, vp, vs, vz, jnp.asarray(desc), impl=impl)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_dense),
+                               rtol=1e-4, atol=1e-4)
+    real = int((desc[:, 2] > 0).sum())
+    assert real == hkv * sum(-(-int(l) // ps) for l in lengths)
+    # pow-2 padded, never the dense rectangle's worth of extra lanes
+    assert real <= desc.shape[0] < 2 * max(real, 4) + 8
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,ps,ctx_lens,q_lens,c", PREFILL_CASES)
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_wq_prefill_matches_dense_oracle(rng, b, hq, hkv, d, ps, ctx_lens,
+                                         q_lens, c, impl):
+    """Work-queue prefill (history page items + causal chunk items) ==
+    the dense oracle on every valid row — including the union-batch case
+    with a decode row, a first-chunk row, and a qlen-0 pad row."""
+    args = make_prefill(rng, b, hq, hkv, d, ps, ctx_lens, q_lens, c)
+    q, kn, vn, kp, ks, kz, vp, vs, vz, tbl, ctx, qls = args
+    o_dense = ref.paged_kv4_prefill_attention_ref(*args)
+    desc = build_work_queue(np.asarray(tbl), ctx_lens, ps, hkv, q_lens)
+    o = ops.paged_kv4_prefill_attention_wq(
+        q, kn, vn, kp, ks, kz, vp, vs, vz, jnp.asarray(desc), impl=impl)
+    for bi, ql in enumerate(q_lens):
+        np.testing.assert_allclose(
+            np.asarray(o)[bi, :ql], np.asarray(o_dense)[bi, :ql],
+            rtol=1e-4, atol=1e-4)
+    # qlen-0 rows contribute no chunk item; ctx-0 rows no page items
+    real = int((desc[:, 2] > 0).sum())
+    assert real == hkv * (sum(-(-int(l) // ps) for l in ctx_lens)
+                          + sum(1 for l in q_lens if l > 0))
+
+
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_wq_prefill_zero_history_is_causal_flash(rng, impl):
+    """ctx = 0 everywhere → only chunk items exist and the work-queue
+    kernel reduces to plain fp causal attention over the chunk."""
+    b, hq, hkv, d, ps, c = 2, 8, 2, 64, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, c, hq, d)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, c, hkv, d)), jnp.float32)
+    kp = jnp.zeros((1, ps, hkv, d // 2), jnp.uint8)
+    ks = jnp.ones((hkv, 1, d), jnp.float32)
+    kz = jnp.zeros((hkv, 1, d), jnp.float32)
+    desc = build_work_queue(np.zeros((b, 1), np.int32), [0, 0], ps, hkv,
+                            [c, c])
+    o = ops.paged_kv4_prefill_attention_wq(
+        q, kn, vn, kp, ks, kz, kp, ks, kz, jnp.asarray(desc), impl=impl)
+    o_flash = flash_attention(q, kn, vn, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_flash),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_build_work_queue_layout():
+    """Descriptor contract: row-major item order, real-page coverage,
+    per-page token counts, pow-2 padding with the sentinel row."""
+    tbl = np.asarray([[5, 3, 7, -1], [2, -1, -1, -1]])
+    desc = build_work_queue(tbl, [70, 9], page_size=32, num_kv_heads=2,
+                            q_lens=[4, 0])
+    # seq 0: 3 pages (32+32+6) + chunk, per head; seq 1: 1 page (9 tok)
+    real = desc[desc[:, 2] > 0]
+    assert len(real) == 2 * (3 + 1) + 2 * 1
+    np.testing.assert_array_equal(
+        real[:4], [[0, 5, 32, 0], [0, 3, 32, 0], [0, 7, 6, 0],
+                   [0, 0, 4, 1]])                    # head 0 of seq 0
+    np.testing.assert_array_equal(real[8], [2, 2, 9, 0])   # seq 1, head 0
+    assert desc.shape[0] == 16                       # pow-2 padded
+    assert (desc[len(real):, 0] == 4).all()          # sentinel row B·Hkv
+    assert (desc[len(real):, 2] == 0).all()
+    # bucketed batches override the sentinel so it clears the padded
+    # row count (rows [B, Nb) are live qlen-0 segments in the combine)
+    desc8 = build_work_queue(tbl, [70, 9], 32, 2, [4, 0], pad_row=8 * 2)
+    assert (desc8[len(real):, 0] == 16).all()
+    np.testing.assert_array_equal(desc8[:len(real)], real)
+    with pytest.raises(IndexError):
+        build_work_queue(tbl, [70, 40], 32, 2)       # unmapped page hit
 
 
 def test_batched_append_matches_per_seq(rng):

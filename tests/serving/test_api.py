@@ -366,3 +366,58 @@ def test_reentrant_abort_during_length_cap_reservation(setup):
     assert [e.token for e in b.events if e.token is not None] == b.generated
     # no leaked or corrupted pages
     assert eng.cache.pages_free == 16 and (eng.cache.ref == 0).all()
+
+
+# ------------------------------------------------------- bounded retention
+
+
+def test_release_bounds_terminal_retention(setup):
+    """Regression (ROADMAP bounded-retention item): terminal request
+    state used to live for the engine's lifetime — ``release(handle)``
+    must return ``sched.finished``, the id map, and the event logs to
+    their pre-submit baseline so memory scales with in-flight work."""
+    eng = make_engine(setup)
+    handles = [eng.submit([1 + i, 2, 3, 4 + i], SamplingParams(
+        max_new_tokens=4)) for i in range(4)]
+    eng.run()
+    eng.events()                         # consume the engine-wide queue
+    results = {h.request_id: list(eng.result(h).generated)
+               for h in handles}
+    assert all(len(t) == 4 for t in results.values())
+    assert len(eng.sched.finished) == 4
+    assert all(eng.result(h).events for h in handles)
+
+    for h in handles:
+        assert eng.release(h)
+    assert len(eng.sched.finished) == 0          # scheduler forgot them
+    assert all(eng.result(h) is None for h in handles)   # id map too
+    # idempotent / unknown-safe
+    assert not eng.release(handles[0])
+    assert not eng.release(12345)
+
+
+def test_release_refuses_in_flight(setup):
+    """Only terminal requests release — in-flight state must go through
+    abort() (refcount-exact) first."""
+    eng = make_engine(setup)
+    h = eng.submit([5, 6, 7], SamplingParams(max_new_tokens=8))
+    assert not eng.release(h)            # QUEUED
+    eng.step()
+    assert not eng.release(h)            # PREFILLING/DECODING
+    assert eng.abort(h)
+    assert eng.release(h)
+    assert eng.result(h) is None
+    assert eng.cache.pages_free == eng.ecfg.num_pages
+
+
+def test_release_makes_request_id_reusable(setup):
+    """A released id can be resubmitted immediately (the batch API's
+    fixed-id pattern keeps working under bounded retention)."""
+    eng = make_engine(setup)
+    eng.add_request(0, [1, 2, 3], 3)
+    eng.run()
+    first = list(eng.result(0).generated)
+    assert eng.release(0)
+    eng.add_request(0, [1, 2, 3], 3)
+    eng.run()
+    assert list(eng.result(0).generated) == first

@@ -206,3 +206,63 @@ def test_first_publisher_wins_duplicate_prefix():
     assert p1 in cache.free_pages               # truly freed
     cache.free_seq(0)
     assert cache.match_prefix(tokens + [9])[1] == 4
+
+
+def make_capped_cache(max_pages_cached, num_pages=8, page_size=4):
+    cfg = get_smoke_config("llama3_8b")
+    pb = (2 * page_size * cfg.num_kv_heads * (cfg.head_dim // 2))
+    return PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=num_pages, page_size=page_size,
+                            max_seqs=4, max_pages_per_seq=8,
+                            reclaimable_max_bytes=max_pages_cached * pb), 1)
+
+
+def publish_and_free(cache, seq_id, tokens):
+    assert cache.allocate_seq(seq_id, len(tokens))
+    cache.seq_len[seq_id] = len(tokens)
+    cache.publish_prefix(seq_id, tokens)
+    cache.free_seq(seq_id)
+
+
+def test_reclaimable_byte_cap_evicts_lru():
+    """The LRU holds at most ``reclaimable_max_bytes``: publishing past
+    the cap evicts oldest-first (their index entries go with them), the
+    eviction counter ticks, and the newest prefixes stay matchable."""
+    cache = make_capped_cache(max_pages_cached=2)
+    prompts = [[i * 10 + j for j in range(5)] for i in range(3)]
+    for i, p in enumerate(prompts[:2]):
+        publish_and_free(cache, i, p)
+    assert cache.prefix_reclaimable_bytes == 2 * cache.page_bytes
+    assert cache.prefix_evicted_pages == 0
+    publish_and_free(cache, 2, prompts[2])      # cap → evict prompt 0's page
+    assert cache.prefix_reclaimable_bytes == 2 * cache.page_bytes
+    assert cache.prefix_evicted_pages == 1
+    assert cache.match_prefix(prompts[0]) == ([], 0)     # evicted
+    assert cache.match_prefix(prompts[1])[1] == 4        # survivors
+    assert cache.match_prefix(prompts[2])[1] == 4
+    # evicted pages are genuinely free (on the free list, not the LRU)
+    assert cache.pages_free == 8 and len(cache.free_pages) == 6
+
+
+def test_zero_byte_cap_disables_caching_without_leaks():
+    """Cap 0 → every published page is evicted the moment its refcount
+    drops; the allocator stays exact (pages all return to the free
+    list) and matching never hits."""
+    cache = make_capped_cache(max_pages_cached=0)
+    tokens = list(range(1, 10))
+    publish_and_free(cache, 0, tokens)
+    assert cache.prefix_reclaimable_bytes == 0
+    assert cache.prefix_evicted_pages == 2      # both full pages dropped
+    assert cache.match_prefix(tokens + [99]) == ([], 0)
+    assert len(cache.free_pages) == 8
+
+
+def test_acquire_pressure_eviction_counts():
+    """Allocation-pressure evictions (the pre-preemption LRU pop) tick
+    the same counter as cap evictions."""
+    cache = make_prefix_cache(num_pages=2, page_size=4)
+    publish_and_free(cache, 0, [1, 2, 3, 4, 9])
+    assert cache.prefix_evicted_pages == 0
+    assert cache.allocate_seq(1, 8)             # needs both pages → evict
+    assert cache.prefix_evicted_pages == 1
+    assert cache.prefix_reclaimable_bytes == 0

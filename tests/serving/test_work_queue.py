@@ -1,0 +1,174 @@
+"""Work-queue vs dense attention schedule through the serving engine.
+
+The two schedules are the SAME math reassociated (per-page partial
+softmax + split-KV combine vs one online-softmax walk), so greedy
+output must be token-identical — each scenario pins a workload seed
+with healthy argmax margins, the same practice as the unified-vs-split
+and chunked-vs-whole parity suites (bf16 reassociation noise is
+O(1e-2) on logits and flips argmax only on near-ties).
+
+Also pinned here: the schedule's accounting (identical real work,
+strictly smaller launched grid, strictly less padding waste than the
+dense rectangle), the one-forward-per-step invariant and trace plateau
+under work-item bucketing (the jit-cache dimension that replaces
+npages), and parity across mid-decode snapshot/restore. The smoke
+config is GQA (4 query heads over 2 kv heads), so every sweep
+exercises grouped heads; bucketed batches (nseq rounded up to pow-2)
+exercise qlen-0 pad rows on every non-pow-2 workload.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, sched, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(max_batch=6, num_pages=128, page_size=8,
+                    max_pages_per_seq=32, prefill_chunk_tokens=24,
+                    kv_range=4.0, attention_schedule=sched)
+    defaults.update(kw)
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults))
+
+
+def run_tokens(eng, prompts, max_new, max_steps=400):
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, max_new)
+    done = eng.run(max_steps=max_steps)
+    assert sorted(r.request_id for r in done) == list(range(len(prompts)))
+    return {r.request_id: list(r.generated) for r in done}
+
+
+def ragged_prompts(lens, vocab, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, n).tolist() for n in lens]
+
+
+MIXES = {
+    # (prompt lens, max_new, pinned workload seed)
+    # one dominant long-context row serializing the dense grid while
+    # short rows pad to its page count — the Fig. 8 imbalance
+    "dominant_long_row": ((96, 6, 9, 5, 12, 7), 16, 1),
+    # ragged steady-state mix (prefill chunks + decode rows united)
+    "ragged_mix": ((40, 7, 23, 64, 13, 29), 8, 1),
+    # batch of one: a single row still combines across its page items
+    "batch_one": ((50,), 12, 1),
+    # 5 rows bucket to nseq=8 → three qlen-0 pad rows in every forward
+    "pad_rows": ((9, 17, 5, 26, 11), 6, 1),
+}
+
+
+@pytest.mark.parametrize("mix", list(MIXES))
+def test_wq_matches_dense_greedy(setup, mix):
+    cfg = setup[0]
+    lens, max_new, seed = MIXES[mix]
+    prompts = ragged_prompts(lens, cfg.vocab_size, seed)
+    dense = run_tokens(make_engine(setup, "dense"), prompts, max_new)
+    wq = run_tokens(make_engine(setup, "work_queue"), prompts, max_new)
+    assert wq == dense
+
+
+def test_wq_matches_dense_split_step_decode(setup):
+    """The split-step baseline's separate decode forward also honors the
+    schedule knob (work-queue decode kernel), token-identically."""
+    cfg = setup[0]
+    prompts = ragged_prompts((24, 7, 13), cfg.vocab_size, seed=1)
+    dense = run_tokens(make_engine(setup, "dense", unified_step=False),
+                       prompts, 8)
+    wq = run_tokens(make_engine(setup, "work_queue", unified_step=False),
+                    prompts, 8)
+    assert wq == dense
+
+
+def test_wq_counters_fewer_grid_items(setup):
+    """Same real work, strictly smaller launched grid, strictly less
+    padding waste — the measured Stream-K claim, as counters."""
+    cfg = setup[0]
+    lens, max_new, seed = MIXES["dominant_long_row"]
+    prompts = ragged_prompts(lens, cfg.vocab_size, seed)
+    dn = make_engine(setup, "dense")
+    run_tokens(dn, prompts, max_new)
+    wq = make_engine(setup, "work_queue")
+    run_tokens(wq, prompts, max_new)
+    assert wq.attn_work_items == dn.attn_work_items > 0
+    assert wq.attn_grid_items < dn.attn_grid_items
+    assert dn.attn_grid_items == dn.attn_dense_grid_items
+    assert wq.attn_dense_grid_items == dn.attn_dense_grid_items
+    wq_waste = wq.attn_grid_items - wq.attn_work_items
+    dn_waste = dn.attn_grid_items - dn.attn_work_items
+    assert wq_waste < dn_waste
+    # the wq grid is the pow-2 bucketed work count (min 8 per forward)
+    assert wq.attn_grid_items < 2 * wq.attn_work_items + 8 * wq.attn_forwards
+
+
+def test_wq_trace_plateau_and_one_forward_per_step(setup):
+    """The work-item bucket replaces npages as the attention dimension
+    of the jit-cache key: steady-state decode reuses the compiled
+    forward (trace plateau) and the one-forward-per-step invariant
+    survives the schedule swap."""
+    cfg = setup[0]
+    prompts = ragged_prompts((5, 3, 7, 4, 6, 2), cfg.vocab_size, seed=1)
+    eng = make_engine(setup, "work_queue", page_size=64, num_pages=16,
+                      max_pages_per_seq=4, prefill_chunk_tokens=32)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 24)
+    eng.step()                          # prefill forward
+    eng.step()                          # first decode forward
+    warm = eng.trace_count
+    assert warm >= 1
+    eng.run(max_steps=400)
+    assert eng.trace_count == warm      # plateau: no steady-state retrace
+    assert eng.forward_calls == eng.steps
+    assert all(len(r.generated) == 24 for r in eng.sched.finished)
+
+
+def test_wq_matches_dense_mid_decode_snapshot_restore(setup):
+    """Snapshot mid-decode (multi-page block tables live), restore, and
+    drain — both schedules walk the identical restore path, so their
+    final text must match each other token for token."""
+    cfg, qc, qparams = setup
+    prompts = ragged_prompts((11, 19, 7), cfg.vocab_size, seed=2)
+    out = {}
+    for sched in ("dense", "work_queue"):
+        ecfg = EngineConfig(max_batch=3, num_pages=64, page_size=4,
+                            kv_range=4.0, attention_schedule=sched)
+        eng = Engine(cfg, qparams, qc, ecfg)
+        for i, p in enumerate(prompts):
+            eng.add_request(i, p, 7)
+        for _ in range(4):
+            eng.step()
+        assert any((eng.cache.block_table[r.seq_slot] >= 0).sum() >= 2
+                   for r in eng.sched.running)
+        blob = eng.snapshot()
+        del eng                          # crash
+        eng2 = Engine.restore(blob, cfg, qparams, qc, ecfg)
+        done = eng2.run()
+        assert sorted(r.request_id for r in done) == [0, 1, 2]
+        out[sched] = {r.request_id: (list(r.prompt), list(r.generated))
+                      for r in done}
+    assert out["work_queue"] == out["dense"]
+
+
+def test_wq_temperature_sampling_deterministic(setup):
+    """(request_id, position)-keyed sampling reproduces stochastic text
+    under the work-queue schedule too."""
+    cfg = setup[0]
+    prompts = ragged_prompts((9, 17, 5), cfg.vocab_size, seed=1)
+    kw = dict(temperature=0.8, top_k=8)
+    a = run_tokens(make_engine(setup, "work_queue", **kw), prompts, 6)
+    b = run_tokens(make_engine(setup, "work_queue", **kw), prompts, 6)
+    assert a == b
+    assert any(len(set(t)) > 1 for t in a.values())   # actually sampled
