@@ -45,9 +45,17 @@ Two parts:
     cache-off, greedy-token-identical output, and the unified step's
     one-forward/trace-plateau structure preserved.
 
+(g) **Tensor-parallel parity** (``--smoke --sharded``): the mixed
+    workload on one device vs a (1, m) local mesh with heads/KV pools
+    sharded over the model axis. Greedy tokens must be identical, the
+    one-forward-per-step invariant must hold, and the per-shard
+    ``attn_work_items`` counters must split the work-queue items evenly.
+    Skips (with a message) on a single-device host.
+
 ``--smoke`` runs parts (d), (e) and (f) — the CI end-to-end exercise of
 the prefill/decode interleave path, the unified-step dataflow, and the
-prefix-cached request lifecycle.
+prefix-cached request lifecycle. ``--smoke --sharded`` runs ONLY part
+(g), under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 ``--attention-schedule work_queue|dense`` selects the paged-attention
 grid schedule for every measured engine part (default: the Stream-K
@@ -364,8 +372,96 @@ def measured_prefix_cache(verbose=True, sched="work_queue"):
     return results
 
 
-def main(smoke: bool = False, sched: str = "work_queue"):
+def measured_sharded_parity(verbose=True, sched="work_queue"):
+    """(g) Tensor-parallel parity: the same mixed prefill+decode workload
+    on one device vs a (1, m) mesh sharding heads/pools over the model
+    axis. Asserted via counters and greedy tokens, not wall-clock: the
+    sharded engine must be token-identical (int4_fraction=1.0 keeps the
+    per-shard act-quant blocks bit-exact), keep one forward per step,
+    and split the attention work items evenly across shards."""
+    import dataclasses as _dc
+
+    from repro.launch.mesh import make_local_mesh
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        print("sharded parity: SKIPPED — 1 device (run under XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return None
+    # smoke configs have q_dim=128 (too small to split a 128-channel
+    # act-quant block); head_dim=64 gives q_dim=256 = 2 shardable blocks
+    cfg = _dc.replace(get_smoke_config("llama3_8b"), head_dim=64)
+    tp = min(2, cfg.num_kv_heads)                   # llama3_8b smoke: 2 kv
+    qc = QuantConfig(int4_fraction=1.0, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, qaxes = LM(cfg, quant=qc).quantize(params, axes)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (11, 19, 7, 26)]
+    results = {}
+    for mode in ("single", "sharded"):
+        mesh = make_local_mesh(1, tp) if mode == "sharded" else None
+        eng = Engine(cfg, qparams, qc, EngineConfig(
+            max_batch=4, num_pages=64, page_size=8, kv_range=4.0,
+            attention_schedule=sched),
+            mesh=mesh, param_axes=qaxes if mesh is not None else None)
+        t0 = time.time()
+        for i, p in enumerate(prompts):
+            eng.add_request(i, p, 8)
+        done = eng.run(max_steps=200)
+        dt = time.time() - t0
+        results[mode] = {
+            "tok_s": eng.tokens_generated / dt,
+            "tokens": {r.request_id: list(r.generated) for r in done},
+            "steps": eng.steps,
+            "forwards": eng.forward_calls,
+            "traces": eng.trace_count,
+            "work_items": eng.attn_work_items,
+            "per_shard": list(eng.attn_work_items_per_shard),
+        }
+        if verbose:
+            r = results[mode]
+            print(f"{mode:7s} (tp={eng.tp_size}): {r['tok_s']:7.1f} tok/s  "
+                  f"steps={r['steps']:3d}  forwards={r['forwards']:3d}  "
+                  f"traces={r['traces']}  work_items={r['work_items']:4d}  "
+                  f"per_shard={r['per_shard']}")
+    if verbose:
+        s, sh = results["single"], results["sharded"]
+        print(f"sharded parity: greedy-identical="
+              f"{s['tokens'] == sh['tokens']}, per-shard spread="
+              f"{max(sh['per_shard']) - min(sh['per_shard'])}")
+    return results
+
+
+def main(smoke: bool = False, sched: str = "work_queue",
+         sharded: bool = False):
     t0 = time.time()
+    if smoke and sharded:
+        print("== fig11 --smoke --sharded: tensor-parallel parity "
+              "(tiny model, forced CPU mesh) ==")
+        sp = measured_sharded_parity(sched=sched)
+        dt = time.time() - t0
+        if sp is None:
+            print(f"fig11_e2e_throughput,{dt*1e6:.0f},sharded=SKIPPED")
+            return
+        s, sh = sp["single"], sp["sharded"]
+        assert sh["tokens"] == s["tokens"], (
+            "sharded engine changed greedy output")
+        assert sh["forwards"] == sh["steps"], (
+            "sharding broke the one-forward-per-step invariant")
+        assert sh["traces"] <= s["traces"], (
+            "sharding must not add compiled forward variants")
+        assert sum(sh["per_shard"]) == sh["work_items"], (
+            "per-shard attention work must account for every item")
+        assert max(sh["per_shard"]) == min(sh["per_shard"]), (
+            "head-sharded work queue must split items evenly")
+        print(f"fig11_e2e_throughput,{dt*1e6:.0f},"
+              f"sharded_parity=identical;"
+              f"tp={len(sh['per_shard'])};"
+              f"work_items_per_shard={sh['per_shard'][0]};"
+              f"forwards={sh['forwards']}of{sh['steps']}steps")
+        return
     if smoke:
         print("== fig11 --smoke: chunked vs whole-prompt prefill "
               "(tiny model, CPU) ==")
@@ -466,5 +562,11 @@ if __name__ == "__main__":
                     choices=["work_queue", "dense"],
                     help="paged-attention grid schedule for every "
                          "measured engine part (fig10 ablates the two)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --smoke: run ONLY part (g), single-device "
+                         "vs tensor-parallel parity on a local mesh "
+                         "(needs >=2 devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
-    main(smoke=args.smoke, sched=args.attention_schedule)
+    main(smoke=args.smoke, sched=args.attention_schedule,
+         sharded=args.sharded)

@@ -5,6 +5,15 @@ continuous batching), stream tokens as they are sampled, abort one
 request mid-flight, and crash/restore from a snapshot.
 
     PYTHONPATH=src python examples/serve_batched.py
+
+The same engine runs tensor-parallel by passing a mesh: build one with
+``repro.launch.mesh.make_local_mesh(1, m)`` and construct
+``Engine(..., mesh=mesh, param_axes=qaxes)`` (the axes tree
+``LM.quantize`` returns alongside qparams) — greedy output is
+unchanged. The serve CLI exposes this as ``--mesh 1xm``; try it on CPU
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8
+PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke
+--mesh 1x2 --head-dim 64 --int4-fraction 1.0``.
 """
 import time
 

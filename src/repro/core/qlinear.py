@@ -131,8 +131,15 @@ def quantize_linear_fraction(
     return qparams, spec
 
 
-def qlinear_apply(spec: QLinearSpec, qparams, x: jax.Array) -> jax.Array:
-    """x: [..., K] float → [..., N] (activation dtype preserved)."""
+def qlinear_apply(spec: QLinearSpec, qparams, x: jax.Array,
+                  out_dtype=None) -> jax.Array:
+    """x: [..., K] float → [..., N] (activation dtype preserved).
+
+    ``out_dtype`` overrides the output cast only — the act-quant still
+    sees ``x`` in its own dtype, so the int4/int8 codes are unchanged.
+    Tensor-parallel callers use this to keep the f32 partial sum exact
+    across the all-reduce before the single bf16 rounding.
+    """
     in_dtype = x.dtype
     if spec.has_perm:
         x = jnp.take(x, qparams["perm"], axis=-1)
@@ -158,14 +165,14 @@ def qlinear_apply(spec: QLinearSpec, qparams, x: jax.Array) -> jax.Array:
     )
     if "b" in qparams:
         out = out + qparams["b"]
-    return out.astype(in_dtype)
+    return out.astype(out_dtype if out_dtype is not None else in_dtype)
 
 
 # ---------------------------------------------------------------------------
 # C.linear dispatch handler: any params dict carrying "w_packed" routes here
 # ---------------------------------------------------------------------------
 
-def _dispatch_qlinear(params, x):
+def _dispatch_qlinear(params, x, out_dtype=None):
     rt = _ACTIVE_RUNTIME
     kp = params["w_packed"].shape[-2]
     k = 2 * kp
@@ -180,14 +187,14 @@ def _dispatch_qlinear(params, x):
         out = x.astype(jnp.bfloat16) @ w
         if "b" in params:
             out = out + params["b"].astype(jnp.bfloat16)
-        return out
+        return out.astype(out_dtype) if out_dtype is not None else out
     nb = k // BLOCK_K
     nb4 = max(0, min(nb, int(round(rt.int4_fraction * nb))))
     spec = QLinearSpec(
         k=k, n=params["w_packed"].shape[-1], k4=nb4 * BLOCK_K,
         has_perm="perm" in params, schedule=rt.schedule, impl=rt.impl,
     )
-    return qlinear_apply(spec, params, x)
+    return qlinear_apply(spec, params, x, out_dtype=out_dtype)
 
 
 _common.register_quant_linear(_dispatch_qlinear)

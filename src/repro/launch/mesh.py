@@ -13,7 +13,27 @@ import math
 import jax
 import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "parse_mesh_arg"]
+
+
+def parse_mesh_arg(spec: str) -> tuple[int, int]:
+    """CLI ``--mesh DxM`` → ``(data, model)``, e.g. ``"1x4"`` → (1, 4).
+
+    Pure string parsing (no device touch) so launchers can validate the
+    flag before importing/initializing a backend. Raises ValueError on
+    anything that is not two positive ints joined by 'x'."""
+    parts = spec.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh expects DATAxMODEL (e.g. 1x4), got {spec!r}")
+    try:
+        data, model = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects DATAxMODEL (e.g. 1x4), got {spec!r}") from None
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    return data, model
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -9,24 +9,32 @@ many prompt tokens the synthetic trace shares, ``--prefix-cache-max-
 bytes`` caps the reclaimable LRU); ``--attention-schedule`` picks the
 paged-attention grid schedule (Stream-K work queue vs dense baseline);
 ``--abort-every N`` cancels every Nth request mid-flight to exercise
-the abort path. The end-of-run summary reports throughput, prefix-cache
-hit rate + eviction counters, schedule work/grid counters, and aborted
+the abort path; ``--mesh DxM`` (model > 1) turns on tensor-parallel
+sharded serving — heads and int4 KV pools shard over the model axis
+with the scheduler and page allocator staying host-global. The
+end-of-run summary reports throughput, prefix-cache hit rate + eviction
+counters, schedule work/grid counters (per shard under TP), and aborted
 counts.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
       --requests 16 --max-new 32 --stream --prefix-cache on
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b \
+      --smoke --mesh 1x2 --head-dim 64 --int4-fraction 1.0
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_config, get_smoke_config
+from repro.launch.mesh import make_local_mesh, parse_mesh_arg
 from repro.models.lm import LM, QuantConfig
 from repro.serving.engine import Engine, EngineConfig, SamplingParams
 
@@ -81,10 +89,24 @@ def main():
                          "(0 = all up front). Staggered arrivals let "
                          "later requests hit the prefix published by "
                          "earlier ones")
+    ap.add_argument("--mesh", default="1x1", metavar="DxM",
+                    help="(data, model) mesh for tensor-parallel sharded "
+                         "serving, e.g. 1x4 shards heads + KV pools over "
+                         "4 devices (CPU smoke: set XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N first). 1x1 = "
+                         "single-device (default)")
+    ap.add_argument("--head-dim", type=int, default=0,
+                    help="override cfg.head_dim (0 = keep). The smoke "
+                         "configs use head_dim=32 → q_dim=128, too small "
+                         "for row-parallel TP (shards must hold whole "
+                         "128-channel quant blocks) — pass 64 with "
+                         "--smoke --mesh 1x2")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.head_dim:
+        cfg = dataclasses.replace(cfg, head_dim=args.head_dim)
     quant = QuantConfig(int4_fraction=args.int4_fraction,
                         schedule=args.schedule, impl=args.impl)
     lm_fp = LM(cfg)
@@ -93,8 +115,21 @@ def main():
     print(f"[init+quantize] {cfg.name} "
           f"(~{cfg.param_count()/1e6:.1f}M params)", flush=True)
     params, axes = lm_fp.init(jax.random.PRNGKey(args.seed))
-    qparams, _ = lm_q.quantize(params, axes)
+    qparams, qaxes = lm_q.quantize(params, axes)
     del params
+
+    data, model = parse_mesh_arg(args.mesh)
+    mesh = None
+    if model > 1:
+        mesh = make_local_mesh(data, model)
+        got = int(mesh.shape["model"])
+        if got != model:
+            print(f"[warn] --mesh asked model={model} but only "
+                  f"{len(jax.devices())} device(s) exist → model={got}",
+                  flush=True)
+        print(f"[mesh] (data={mesh.shape['data']}, model={got}) over "
+              f"{jax.device_count()} {jax.default_backend()} device(s)",
+              flush=True)
 
     eng = Engine(cfg, qparams, quant, EngineConfig(
         max_batch=args.max_batch, num_pages=args.pages,
@@ -104,7 +139,8 @@ def main():
         unified_step=(args.step_mode == "unified"),
         prefix_cache=(args.prefix_cache == "on"),
         attention_schedule=args.attention_schedule,
-        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None)))
+        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None)),
+        mesh=mesh, param_axes=qaxes)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -173,6 +209,11 @@ def main():
               f"{eng.attn_forwards} forwards; grid={eng.attn_grid_items} "
               f"(waste {waste}; dense rectangle would waste "
               f"{dense_waste})", flush=True)
+        if eng.tp_size > 1:
+            print(f"[sched] per-shard work items "
+                  f"{eng.attn_work_items_per_shard} (balanced split of "
+                  f"{eng.attn_work_items} over model={eng.tp_size})",
+                  flush=True)
     for r in finished[:4]:
         print(f"  req {r.request_id}: {r.state.value:9s} "
               f"{r.generated[:12]}…", flush=True)

@@ -53,11 +53,17 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False):
 
 
 def _project_qkv(params, cfg: ModelConfig, xq, xkv, positions_q, positions_kv,
-                 use_rope: bool = True):
+                 use_rope: bool = True, num_heads: Optional[int] = None,
+                 num_kv_heads: Optional[int] = None):
+    """``num_heads``/``num_kv_heads`` override the config head counts for
+    TP-sharded callers whose wq/wk/wv hold a per-shard head slice (RoPE
+    and QK-norm are per-head, so the local slice needs no other care)."""
     b = xq.shape[0]
-    q = C.linear(params["wq"], xq).reshape(b, -1, cfg.num_heads, cfg.head_dim)
-    k = C.linear(params["wk"], xkv).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
-    v = C.linear(params["wv"], xkv).reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+    nh = cfg.num_heads if num_heads is None else num_heads
+    nkv = cfg.num_kv_heads if num_kv_heads is None else num_kv_heads
+    q = C.linear(params["wq"], xq).reshape(b, -1, nh, cfg.head_dim)
+    k = C.linear(params["wk"], xkv).reshape(b, -1, nkv, cfg.head_dim)
+    v = C.linear(params["wv"], xkv).reshape(b, -1, nkv, cfg.head_dim)
     if cfg.qk_norm:
         q = C.rmsnorm(q, params["q_norm"]["scale"], cfg.norm_eps)
         k = C.rmsnorm(k, params["k_norm"]["scale"], cfg.norm_eps)

@@ -67,6 +67,23 @@ schedule-invariant), ``attn_grid_items`` (launched grid) and
 ``attn_dense_grid_items`` (the rectangle the dense schedule pays) make
 the padding waste measurable — fig10's ragged ablation asserts them.
 
+**Tensor parallelism** (``Engine(..., mesh=..., param_axes=...)`` with a
+``(data, model)`` mesh whose model axis > 1). The one-forward-per-step
+seam is the ONLY device boundary: ``shard_map`` wraps the unified body,
+sharding projection weights column-wise (wq/wk/wv/w_up/w_gate) and
+row-wise (wo/w_down) and the int4 KV pools over kv heads, while the
+scheduler, prefix index, and page allocator stay host-global — page ids
+mean the same thing on every shard, so block tables and Stream-K
+work-queue descriptors replicate untouched (each shard walks the same
+page stream with its local head slice; per-shard real work is exactly
+``attn_work_items / tp``, tracked in ``attn_work_items_per_shard``).
+Exactly two all-reduces per layer, at the attention-output and
+MLP-down projections (f32 partial sums, rounded to bf16 once after the
+psum — greedy decode stays token-identical to single-device). The
+embed table and lm head replicate (global token/vocab ids inside the
+shard). Everything host-side — admission, preemption, prefix caching,
+snapshot/restore — is unchanged and unaware of the mesh.
+
 Prefill is chunked and ragged: the scheduler plans up to
 ``prefill_chunk_tokens`` prompt tokens per step (budget shared with the
 step's decode rows, start round-robined so one long prompt cannot
@@ -109,13 +126,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import qlinear as QL
+from repro.core.qlinear import BLOCK_K
 from repro.kernels import ops
 from repro.layers import attention as ATT
 from repro.layers import common as C
 from repro.layers import mlp as MLP
 from repro.models.lm import LM, QuantConfig
+from repro.parallel import sharding as SH
+from repro.serving import kv_cache as KVC
 from repro.serving.api import (RequestHandle, RequestOutput, RequestState,
                                SamplingParams)
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
@@ -134,6 +157,54 @@ def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
     out = np.full((n,), fill, np.int32)
     out[: len(a)] = a
     return out
+
+
+def _row_linear(p, x, tp_axis):
+    """Row-parallel (K-sharded) projection seam: each shard holds a
+    K-slice of the weight, so its output is a partial sum that must
+    all-reduce over ``tp_axis``. With ``tp_axis=None`` this is exactly
+    ``C.linear`` (the single-device path stays bit-identical).
+
+    Numerics under TP: the act-quant must see the input in the SAME
+    dtype as the single-device path (``absmax_scale`` divides in the
+    input dtype before its f32 cast, so a bf16-valued f32 input still
+    shifts the scale's last bit and flips int4 codes on rounding ties).
+    So the handler gets the bf16 input unchanged and only the GEMM
+    *output* is kept f32 (``out_dtype``) for the psum — rounding to
+    bf16 once, after the cross-shard sum. psum over bf16-rounded
+    partials would instead inject ~0.4% logit noise and flip greedy
+    argmax on near-ties."""
+    if tp_axis is None:
+        return C.linear(p, x)
+    xb = x.astype(jnp.bfloat16)
+    pl = {k: v for k, v in p.items() if k != "b"}
+    if "w_packed" in pl:
+        y = QL._dispatch_qlinear(pl, xb, out_dtype=jnp.float32)
+    else:
+        y = C.linear(pl, xb.astype(jnp.float32),
+                     compute_dtype=jnp.float32)
+    y = jax.lax.psum(y, tp_axis)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(jnp.bfloat16)
+
+
+def _mlp_row(p, x, act: str, tp_axis):
+    """Dense MLP with the down-projection as the TP all-reduce seam:
+    up/gate are column-sharded (bit-identical per-channel math), the
+    silu·up product stays local, and only w_down's K-sharded partial
+    sums cross shards. ``tp_axis=None`` delegates to ``MLP.mlp_apply``
+    unchanged."""
+    if tp_axis is None:
+        return MLP.mlp_apply(p, x, act)
+    up = C.linear(p["w_up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(C.linear(p["w_gate"], x)) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return _row_linear(p["w_down"], h, tp_axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,7 +262,16 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, qparams, quant: QuantConfig,
-                 ecfg: EngineConfig = EngineConfig()):
+                 ecfg: EngineConfig = EngineConfig(), *,
+                 mesh=None, param_axes=None):
+        """``mesh``/``param_axes`` (both optional) turn on tensor-parallel
+        sharded serving: a ``(data, model)`` mesh whose "model" axis > 1
+        shards projection weights and the int4 KV pools over kv heads
+        (``shard_map`` around the unified forward; see
+        :meth:`_unified_forward`). ``param_axes`` is the logical-axes
+        tree ``LM.quantize`` returns alongside ``qparams`` — required
+        whenever the model axis is sharded. A mesh with model == 1 (or
+        ``mesh=None``) is the single-device engine, unchanged."""
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine supports dense/moe; {cfg.family} serves via "
@@ -201,6 +281,10 @@ class Engine:
         self.lm = LM(cfg, quant=quant)
         self.params = qparams
         self.ecfg = ecfg
+        self.mesh = mesh
+        self.tp_size = (int(mesh.shape["model"])
+                        if mesh is not None and "model" in mesh.axis_names
+                        else 1)
         self.cache = PagedKV4Cache(
             cfg,
             PagedKV4Config(
@@ -239,6 +323,12 @@ class Engine:
         self.attn_grid_items = 0
         self.attn_dense_grid_items = 0
         self.attn_forwards = 0
+        # per-shard real work: each model shard attends its local kv
+        # heads over the SAME per-sequence page stream, so the split is
+        # exact — equal entries here are the load-balance evidence the
+        # fig11 sharded part asserts (single device: one entry, equal
+        # to attn_work_items)
+        self.attn_work_items_per_shard = [0] * self.tp_size
         self._fwd_shapes: set = set()
         self._gather_bcast: dict = {}      # bsz → broadcast scales/zeros
         # donate the pool buffers so the traced KV scatter updates them
@@ -246,6 +336,11 @@ class Engine:
         # has no buffer donation (XLA warns and copies), so gate it to
         # the accelerator backends where it is honored
         self.donate_pools = jax.default_backend() in ("tpu", "gpu")
+        self._param_pspecs = None
+        self._pool_pspec = None
+        self._scale_pspec = None
+        if self.tp_size > 1:
+            self._init_sharding(param_axes)
         self._fwd = jax.jit(
             self._unified_forward, static_argnums=(0, 1, 2),
             donate_argnums=(4, 5) if self.donate_pools else ())
@@ -253,6 +348,73 @@ class Engine:
         self._by_id: dict[int, Request] = {}
         self._next_id = 0
         self._events: list[RequestOutput] = []
+
+    # --------------------------------------------------- tensor parallelism
+
+    def _init_sharding(self, param_axes):
+        """Lay params + pools out over the mesh for TP-sharded serving.
+
+        Weights shard by SERVE_RULES (column-parallel wq/wk/wv/w_up/
+        w_gate over their N dims, row-parallel wo/w_down over their K
+        dims); the embed table and lm head are overridden to REPLICATED
+        — inside ``shard_map`` the token gather and the vocab matmul use
+        global ids, so a vocab-sharded table would read garbage. The
+        int4 KV pools shard over kv heads via ``cache_pspecs`` (pages
+        stay a host-global namespace). Divisibility is validated up
+        front rather than silently falling back to replication, because
+        a PARTIALLY sharded projection (w_packed sharded, w_scale
+        replicated) is shape-inconsistent inside the W4Ax matmul."""
+        cfg, m, mesh = self.cfg, self.tp_size, self.mesh
+        if param_axes is None:
+            raise ValueError(
+                "TP-sharded serving needs param_axes — the axes tree "
+                "LM.quantize returns alongside qparams")
+        if not self.ecfg.unified:
+            raise ValueError(
+                "TP-sharded serving runs through the unified one-forward "
+                "step; the split/whole/gather baselines are single-device")
+        if cfg.family != "dense":
+            raise NotImplementedError(
+                "TP-sharded serving covers dense models; MoE needs expert-"
+                "parallel dispatch at this seam")
+        if cfg.num_heads % m or cfg.num_kv_heads % m:
+            raise ValueError(
+                f"num_heads={cfg.num_heads}, num_kv_heads="
+                f"{cfg.num_kv_heads} must both divide by the model axis "
+                f"size {m}")
+        if cfg.q_dim % (BLOCK_K * m) or cfg.d_ff % (BLOCK_K * m):
+            raise ValueError(
+                f"row-parallel W4Ax shards must hold whole {BLOCK_K}-"
+                f"channel quant blocks: q_dim={cfg.q_dim} and d_ff="
+                f"{cfg.d_ff} must divide by {BLOCK_K}*model={BLOCK_K * m}")
+        specs = SH.tree_pspecs(param_axes, self.params, mesh,
+                               SH.SERVE_RULES)
+        for name in ("embed", "lm_head"):
+            if name in specs:
+                specs[name] = jax.tree.map(
+                    lambda s, p: P(*([None] * p.ndim)),
+                    specs[name], self.params[name],
+                    is_leaf=lambda x: isinstance(x, P))
+        self._param_pspecs = specs
+
+        def put(a, s):
+            return jax.device_put(a, NamedSharding(mesh, s))
+
+        self.params = jax.tree.map(put, self.params, specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        cache = self.cache
+        cspecs = SH.cache_pspecs(
+            {"k_pool": cache.k_pool, "v_pool": cache.v_pool,
+             "k_scale": cache.k_scale, "k_zero": cache.k_zero,
+             "v_scale": cache.v_scale, "v_zero": cache.v_zero}, mesh)
+        self._pool_pspec = cspecs["k_pool"]
+        self._scale_pspec = cspecs["k_scale"]
+        cache.k_pool = put(cache.k_pool, cspecs["k_pool"])
+        cache.v_pool = put(cache.v_pool, cspecs["v_pool"])
+        cache.k_scale = put(cache.k_scale, cspecs["k_scale"])
+        cache.k_zero = put(cache.k_zero, cspecs["k_zero"])
+        cache.v_scale = put(cache.v_scale, cspecs["v_scale"])
+        cache.v_zero = put(cache.v_zero, cspecs["v_zero"])
 
     # ----------------------------------------------------- lifecycle API
 
@@ -374,8 +536,10 @@ class Engine:
 
     @classmethod
     def restore(cls, blob: str, cfg, qparams, quant,
-                ecfg: EngineConfig = EngineConfig()) -> "Engine":
-        eng = cls(cfg, qparams, quant, ecfg)
+                ecfg: EngineConfig = EngineConfig(), *,
+                mesh=None, param_axes=None) -> "Engine":
+        eng = cls(cfg, qparams, quant, ecfg, mesh=mesh,
+                  param_axes=param_axes)
         eng.sched = Scheduler.restore(blob, ecfg.max_batch,
                                       ecfg.max_batch * 2)
         eng._by_id = {r.request_id: r for r in
@@ -644,6 +808,7 @@ class Engine:
         no_history = int(starts.max()) == 0
         schedule = self.ecfg.attention_schedule
         hkv = self.cfg.num_kv_heads
+        hkv_loc = hkv // self.tp_size
         wq = schedule == "work_queue" and not no_history
         if wq:
             # flat Stream-K descriptors over the rows' REAL pages (+ one
@@ -651,9 +816,13 @@ class Engine:
             # npages as the attention dimension of the jit-cache key, so
             # the dense block tables collapse to a constant-shape dummy.
             # The padding sentinel must clear the BUCKETED row count:
-            # rows [nseq, nb) are live (qlen-0) segments in the combine
+            # rows [nseq, nb) are live (qlen-0) segments in the combine.
+            # Under TP the descriptor is built for the LOCAL head count:
+            # every shard attends the same page stream with its own head
+            # slice, so one replicated descriptor drives all shards
             desc_np = self.cache.work_queue_np(slots, starts, takes,
-                                               pad_row=nb * hkv)
+                                               pad_row=nb * hkv_loc,
+                                               num_kv_heads=hkv_loc)
             tables = np.zeros((nb, 1), np.int32)
         else:
             desc_np = np.zeros((8, 4), np.int32)
@@ -663,11 +832,16 @@ class Engine:
             # fig10 measured-ablation counters: the real work is the
             # same under both schedules; the launched grid is not
             self.attn_forwards += 1
-            self.attn_work_items += int(
+            items = int(
                 hkv * (np.sum((starts + self.ecfg.page_size - 1)
                               // self.ecfg.page_size) + nseq))
+            self.attn_work_items += items
+            # exact split: work per shard is hkv_loc · (pages + rows)
+            per = items // self.tp_size
+            for i in range(self.tp_size):
+                self.attn_work_items_per_shard[i] += per
             self.attn_dense_grid_items += nb * hkv * (npb + 1)
-            self.attn_grid_items += (desc_np.shape[0] if wq
+            self.attn_grid_items += (desc_np.shape[0] * self.tp_size if wq
                                      else nb * hkv * (npb + 1))
         logits, k_pool, v_pool = self._fwd(
             cb, no_history, schedule, self.params, self.cache.k_pool,
@@ -690,7 +864,9 @@ class Engine:
             jnp.asarray(_pad_to(starts, nb)),          # ctx per row
             jnp.asarray(_pad_to(takes, nb)),           # qlens per row
             jnp.asarray(_pad_to(cum[1:] - 1, nb)),     # last token per row
-            jnp.asarray(desc_np))                      # wq work items
+            jnp.asarray(desc_np),                      # wq work items
+            self.cache.k_scale, self.cache.k_zero,
+            self.cache.v_scale, self.cache.v_zero)
         self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
         logits = np.asarray(logits)
 
@@ -721,19 +897,69 @@ class Engine:
     def _unified_forward(self, cmax: int, no_history: bool, schedule: str,
                          params, k_pool, v_pool, tokens, positions, pages,
                          offs, tseq, toff, dq_mask, block_tables, ctx,
-                         qlens, last_idx, work_items):
+                         qlens, last_idx, work_items,
+                         k_scale, k_zero, v_scale, v_zero):
         """The jitted unified forward (one trace per shape bucket).
 
         tokens/positions/pages/offs/tseq/toff/dq_mask: [Tb] int32 packed
         layout; block_tables: [Nb, NPb]; ctx/qlens/last_idx: [Nb];
         work_items: [Wb, 4] flat Stream-K descriptors (the attention
         shape key under ``schedule="work_queue"`` — block_tables is a
-        [Nb, 1] dummy there; under "dense" the roles swap). Returns
-        (logits [Nb, V] f32, k_pool, v_pool) — pools updated with the
-        step's quantized KV."""
+        [Nb, 1] dummy there; under "dense" the roles swap);
+        k_scale/k_zero/v_scale/v_zero: the cache's static per-channel
+        int4 scales [Hkv, 1, D] (explicit args so ``shard_map`` can hand
+        each shard its head slice). Returns (logits [Nb, V] f32, k_pool,
+        v_pool) — pools updated with the step's quantized KV.
+
+        Single device: runs :meth:`_unified_body` directly. TP: wraps
+        the same body in ``shard_map`` over the engine mesh — params and
+        pools enter pre-sharded (placed by ``_init_sharding``), every
+        int32 layout array is replicated (page ids are host-global), and
+        each shard computes its kv-head slice end to end with psums only
+        at the wo / w_down seams (inside ``_row_linear``)."""
         self.trace_count += 1          # traced body: fires once per compile
+        args = (params, k_pool, v_pool, tokens, positions, pages, offs,
+                tseq, toff, dq_mask, block_tables, ctx, qlens, last_idx,
+                work_items, k_scale, k_zero, v_scale, v_zero)
+        if self.tp_size == 1:
+            # single device: hand the body the CLOSURE scales (trace-time
+            # constants, the historical graph) rather than the traced
+            # copies — embedding them keeps the compiled HLO bit-identical
+            # to the pre-TP engine, so pinned greedy parity workloads
+            # cannot flip on recompilation noise. The traced scale args
+            # are dead here (DCE'd); only shard_map needs them live, to
+            # hand each shard its head slice
+            return self._unified_body(cmax, no_history, schedule, None,
+                                      *args[:15], self.cache.k_scale,
+                                      self.cache.k_zero, self.cache.v_scale,
+                                      self.cache.v_zero)
+        body = functools.partial(self._unified_body, cmax, no_history,
+                                 schedule, "model")
+        pool, scale = self._pool_pspec, self._scale_pspec
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(self._param_pspecs, pool, pool) + (P(),) * 12
+            + (scale,) * 4,
+            out_specs=(P(), pool, pool),
+            check_rep=False)(*args)
+
+    def _unified_body(self, cmax: int, no_history: bool, schedule: str,
+                      tp_axis, params, k_pool, v_pool, tokens, positions,
+                      pages, offs, tseq, toff, dq_mask, block_tables, ctx,
+                      qlens, last_idx, work_items,
+                      k_scale, k_zero, v_scale, v_zero):
+        """Per-shard unified forward. With ``tp_axis=None`` this IS the
+        single-device forward (bit-identical math); under ``shard_map``
+        every array is the local shard and ``tp_axis`` names the mesh
+        axis the two all-reduce seams psum over. Head counts are derived
+        from the local weight shapes via ``_project_qkv`` overrides; the
+        attention kernels are already shape-agnostic (they read head
+        counts off q/pool shapes), so the same work-queue descriptors
+        drive every shard's local heads."""
         cfg = self.cfg
-        cache = self.cache
+        tp = self.tp_size if tp_axis is not None else 1
+        hq_loc = cfg.num_heads // tp
+        hkv_loc = cfg.num_kv_heads // tp
         nseq = block_tables.shape[0]
         with self.lm._ctx():
             x = self.lm._embed(params, tokens[None, :])
@@ -742,19 +968,22 @@ class Engine:
                 bp = jax.tree.map(lambda a: a[li], params["blocks"])
                 h = C.apply_norm(bp["attn_norm"], x, cfg.norm, cfg.norm_eps)
                 q, k, v = ATT._project_qkv(
-                    bp["attn"], cfg, h, h, pos2, pos2)
+                    bp["attn"], cfg, h, h, pos2, pos2,
+                    num_heads=hq_loc, num_kv_heads=hkv_loc)
                 # quantize + page the union's KV (padding rides on OOB
                 # destinations), then attend: fp queries over the int4
                 # history pages + each row's causal in-flight fp chunk
-                kq, vq = cache.quantize_kv(k, v)       # [1, Hkv, Tb, D/2]
-                hkv, half = kq.shape[1], kq.shape[-1]
+                kq, vq = KVC.quantize_kv_with(
+                    k, v, k_scale, k_zero, v_scale, v_zero)
+                hkv, half = kq.shape[1], kq.shape[-1]  # [1, Hloc, Tb, D/2]
                 kq = jnp.moveaxis(kq, 1, 2).reshape(-1, hkv, half)
                 vq = jnp.moveaxis(vq, 1, 2).reshape(-1, hkv, half)
                 k_pool = k_pool.at[li, pages, offs].set(kq, mode="drop")
                 v_pool = v_pool.at[li, pages, offs].set(vq, mode="drop")
                 # decode rows' self-attention reads the fake-quantized
                 # chunk — the same values their int4 page dequantizes to
-                kdq, vdq = cache.qdq_kv(k, v)
+                kdq, vdq = KVC.qdq_kv_with(
+                    k, v, k_scale, k_zero, v_scale, v_zero)
                 m = (dq_mask != 0)[None, :, None, None]
                 k_att = jnp.where(m, kdq, k.astype(jnp.float32))
                 v_att = jnp.where(m, vdq, v.astype(jnp.float32))
@@ -771,23 +1000,23 @@ class Engine:
                 elif schedule == "work_queue":
                     out = ops.paged_kv4_prefill_attention_wq(
                         pad(q), pad(k_att), pad(v_att),
-                        k_pool[li], cache.k_scale, cache.k_zero,
-                        v_pool[li], cache.v_scale, cache.v_zero,
+                        k_pool[li], k_scale, k_zero,
+                        v_pool[li], v_scale, v_zero,
                         work_items, impl=self.quant.impl)
                 else:
                     out = ops.paged_kv4_prefill_attention(
                         pad(q), pad(k_att), pad(v_att),
-                        k_pool[li], cache.k_scale, cache.k_zero,
-                        v_pool[li], cache.v_scale, cache.v_zero,
+                        k_pool[li], k_scale, k_zero,
+                        v_pool[li], v_scale, v_zero,
                         block_tables, ctx, qlens, impl=self.quant.impl)
                 a = out[tseq, toff][None]          # repack [1, Tb, ...]
-                a = a.astype(x.dtype).reshape(1, -1, cfg.q_dim)
-                x = x + C.linear(bp["attn"]["wo"], a)
+                a = a.astype(x.dtype).reshape(1, -1, hq_loc * cfg.head_dim)
+                x = x + _row_linear(bp["attn"]["wo"], a, tp_axis)
                 h = C.apply_norm(bp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
                 if "moe" in bp:
                     y, _ = MLP.moe_apply(bp["moe"], h, cfg)
                 else:
-                    y = MLP.mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                    y = _mlp_row(bp["mlp"], h, cfg.mlp_act, tp_axis)
                 x = x + y
             hN = C.apply_norm(params["final_norm"], x[:, last_idx],
                               cfg.norm, cfg.norm_eps)
@@ -1019,8 +1248,10 @@ class Engine:
             self._count_trace(("decode", bsz, npages))
         if paged:
             self.attn_forwards += 1
-            self.attn_work_items += int(hkv * np.sum(
+            items = int(hkv * np.sum(
                 (lengths_np + self.ecfg.page_size) // self.ecfg.page_size))
+            self.attn_work_items += items
+            self.attn_work_items_per_shard[0] += items  # split: one device
             self.attn_dense_grid_items += bsz * hkv * npages
         with self.lm._ctx():
             x = self.lm._embed(self.params, last)

@@ -77,7 +77,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
-__all__ = ["PagedKV4Config", "PagedKV4Cache", "build_work_queue"]
+__all__ = ["PagedKV4Config", "PagedKV4Cache", "build_work_queue",
+           "quantize_kv_with", "qdq_kv_with"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +93,8 @@ class PagedKV4Config:
 def build_work_queue(block_tables, ctx_lens, page_size: int,
                      num_kv_heads: int, q_lens=None,
                      min_items: int = 8,
-                     pad_row: Optional[int] = None) -> np.ndarray:
+                     pad_row: Optional[int] = None,
+                     seq_ids=None) -> np.ndarray:
     """Flatten a ragged batch into Stream-K work descriptors.
 
     → ``[W, 4]`` int32 rows ``(row, phys_page, count, kind)``:
@@ -116,6 +118,11 @@ def build_work_queue(block_tables, ctx_lens, page_size: int,
     *bucketed* row count when the consumer pads the batch beyond B, so
     the sentinel stays out of every live segment) and ``count = 0`` —
     the combine's segment scatter drops them.
+
+    ``seq_ids`` (optional, [B]) names the caller's sequences — engine
+    cache slots — purely for diagnostics: the unmapped-page error
+    reports these instead of positional batch indices, which are
+    misleading whenever the batch is a non-contiguous slot subset.
     """
     tables = np.atleast_2d(np.asarray(block_tables))
     ctx = np.atleast_1d(np.asarray(ctx_lens)).astype(np.int64)
@@ -133,9 +140,15 @@ def build_work_queue(block_tables, ctx_lens, page_size: int,
     pg_idx = np.arange(pg_off[-1]) - pg_off[seq_of_pg]
     pages_flat = tables[seq_of_pg, pg_idx]
     if (pages_flat < 0).any():
-        bad = np.unique(seq_of_pg[pages_flat < 0]).tolist()
+        bad_idx = np.unique(seq_of_pg[pages_flat < 0])
+        if seq_ids is not None:
+            bad = np.atleast_1d(np.asarray(seq_ids))[bad_idx].tolist()
+            what = "seq slot(s)"
+        else:
+            bad = bad_idx.tolist()
+            what = "batch row(s)"
         raise IndexError(
-            f"work queue over unmapped page(s) for seq(s) {bad} — "
+            f"work queue over unmapped page(s) for {what} {bad} — "
             "grow capacity first")
     counts_flat = np.minimum(ps, ctx[seq_of_pg] - ps * pg_idx)
     # per-seq item streams: pages first, then the chunk item (if any)
@@ -168,6 +181,31 @@ def build_work_queue(block_tables, ctx_lens, page_size: int,
     desc[:len(src), 2] = counts_c[src]
     desc[:len(src), 3] = kinds_c[src]
     return desc
+
+
+def quantize_kv_with(k, v, k_scale, k_zero, v_scale, v_zero):
+    """k/v: [B, T, Hkv, D] float → packed [B, Hkv, T, D/2] uint8.
+
+    Module-level (explicit scales) so the TP-sharded forward can pass
+    per-shard scale slices through ``shard_map`` — ``Hkv`` here is
+    whatever the scale arrays say (local heads under TP)."""
+    def pack(x, scale, zero):
+        xt = x.swapaxes(1, 2).astype(jnp.float32)          # [B, Hkv, T, D]
+        n = jnp.clip(jnp.round(xt / scale + zero), 0, 15).astype(jnp.uint8)
+        half = n.shape[-1] // 2
+        return (n[..., :half] | (n[..., half:] << 4)).astype(jnp.uint8)
+    return pack(k, k_scale, k_zero), pack(v, v_scale, v_zero)
+
+
+def qdq_kv_with(k, v, k_scale, k_zero, v_scale, v_zero):
+    """Fake-quantize k/v ([B, T, Hkv, D] float) through the int4
+    codebook → the exact f32 values a reader dequantizes from the
+    pools. Explicit-scale sibling of :meth:`PagedKV4Cache.qdq_kv`."""
+    def roundtrip(x, scale, zero):
+        xt = x.swapaxes(1, 2).astype(jnp.float32)          # [B, Hkv, T, D]
+        n = jnp.clip(jnp.round(xt / scale + zero), 0, 15)
+        return ((n - zero) * scale).swapaxes(1, 2)
+    return (roundtrip(k, k_scale, k_zero), roundtrip(v, v_scale, v_zero))
 
 
 class PagedKV4Cache:
@@ -314,7 +352,20 @@ class PagedKV4Cache:
             self._adopt_page(int(p))
             self.block_table[seq_id, i] = int(p)
         for i in range(len(prefix_pages), need):
-            self.block_table[seq_id, i] = self._acquire_page()
+            p = self._acquire_page()
+            if p is None:
+                # mid-loop exhaustion (the availability check races with
+                # nothing here, but prefix adoption above can consume
+                # reclaimable pages the estimate counted as free): roll
+                # back every reference this call took — adopted prefix
+                # refs AND already-acquired pages — so the block table
+                # never holds a poisoned slot and the caller sees a
+                # clean False, exactly like the up-front failure path
+                for j in range(i):
+                    self._release_page(int(self.block_table[seq_id, j]))
+                self.block_table[seq_id, :i] = -1
+                return False
+            self.block_table[seq_id, i] = p
         self.seq_len[seq_id] = prefix_tokens
         self.page_count[seq_id] = need
         self.active.add(seq_id)
@@ -430,14 +481,9 @@ class PagedKV4Cache:
     # ------------------------------------------------------------- device ops
 
     def quantize_kv(self, k, v):
-        """[..., T, Hkv→axis2?]— k/v: [B, T, Hkv, D] float → packed [B, Hkv, T, D/2]."""
-        def pack(x, scale, zero):
-            xt = x.swapaxes(1, 2).astype(jnp.float32)      # [B, Hkv, T, D]
-            n = jnp.clip(jnp.round(xt / scale + zero), 0, 15).astype(jnp.uint8)
-            half = n.shape[-1] // 2
-            return (n[..., :half] | (n[..., half:] << 4)).astype(jnp.uint8)
-        return (pack(k, self.k_scale, self.k_zero),
-                pack(v, self.v_scale, self.v_zero))
+        """k/v: [B, T, Hkv, D] float → packed [B, Hkv, T, D/2]."""
+        return quantize_kv_with(k, v, self.k_scale, self.k_zero,
+                                self.v_scale, self.v_zero)
 
     def qdq_kv(self, k, v):
         """Fake-quantize K/V ([B, T, Hkv, D] float) through the pool's
@@ -447,12 +493,8 @@ class PagedKV4Cache:
         numerics as the split decode path (which reads the just-written
         int4 page) — greedy argmax then cannot flip on the fp-vs-int4
         difference of one token."""
-        def roundtrip(x, scale, zero):
-            xt = x.swapaxes(1, 2).astype(jnp.float32)   # [B, Hkv, T, D]
-            n = jnp.clip(jnp.round(xt / scale + zero), 0, 15)
-            return ((n - zero) * scale).swapaxes(1, 2)
-        return (roundtrip(k, self.k_scale, self.k_zero),
-                roundtrip(v, self.v_scale, self.v_zero))
+        return qdq_kv_with(k, v, self.k_scale, self.k_zero,
+                           self.v_scale, self.v_zero)
 
     def write_prompt(self, layer_slot: int, seq_id: int, k, v):
         """Write a prompt's packed KV ([1, T, Hkv, D] float) into pages."""
@@ -547,17 +589,24 @@ class PagedKV4Cache:
 
     def work_queue_np(self, seq_ids, ctx_lens, q_lens=None,
                       min_items: int = 8,
-                      pad_row: Optional[int] = None) -> np.ndarray:
+                      pad_row: Optional[int] = None,
+                      num_kv_heads: Optional[int] = None) -> np.ndarray:
         """Stream-K work descriptors for these sequences' *real* pages
         (see :func:`build_work_queue`): ``[W, 4]`` int32, W padded to a
         power of two. ``ctx_lens`` is the paged history per row;
         ``q_lens`` (optional) adds one in-flight-chunk item per row;
         ``pad_row`` overrides the padding sentinel for bucketed
-        batches."""
+        batches; ``num_kv_heads`` overrides the head count the stream
+        is tiled over (the TP-sharded engine builds ONE descriptor with
+        the per-shard local head count — each sequence's page stream is
+        identical for every head, so the same local-head descriptor is
+        valid on every model shard). Unmapped-page errors report the
+        caller's ``seq_ids``, not positional batch indices."""
         return build_work_queue(
             self.block_table[np.asarray(seq_ids)], ctx_lens,
-            self.pcfg.page_size, self.cfg.num_kv_heads, q_lens, min_items,
-            pad_row)
+            self.pcfg.page_size,
+            self.cfg.num_kv_heads if num_kv_heads is None else num_kv_heads,
+            q_lens, min_items, pad_row, seq_ids=seq_ids)
 
     def block_tables_np(self, seq_ids, npages: int) -> np.ndarray:
         """[B, npages] int32 host table with unmapped slots (-1) clamped

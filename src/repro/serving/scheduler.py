@@ -277,6 +277,13 @@ class Scheduler:
                 "prompt": list(r.prompt) + list(r.generated),
                 "max_new_tokens": r.max_new_tokens - len(r.generated),
                 "arrived_at": r.arrived_at,
+                # TTFT / prefix-hit accounting must survive the restart:
+                # a request that already produced its first token keeps
+                # its stamp (restore must not re-measure TTFT against
+                # the recomputed prefill), and cached_tokens keeps the
+                # prefix-hit counters honest across the crash
+                "first_token_at": r.first_token_at,
+                "cached_tokens": r.cached_tokens,
             }
             if r.params is not None:
                 entry["params"] = dataclasses.asdict(r.params)
@@ -287,6 +294,9 @@ class Scheduler:
             "generated": list(r.generated),
             "stop_reason": r.stop_reason,
             "state": r.state.value,
+            "arrived_at": r.arrived_at,
+            "first_token_at": r.first_token_at,
+            "cached_tokens": r.cached_tokens,
         } for r in self.finished]
         return json.dumps({"pending": reqs, "finished": done})
 
@@ -300,12 +310,17 @@ class Scheduler:
                 request_id=r["request_id"], prompt=r["prompt"],
                 max_new_tokens=r["max_new_tokens"],
                 arrived_at=r["arrived_at"],
+                first_token_at=r.get("first_token_at", 0.0),
+                cached_tokens=r.get("cached_tokens", 0),
                 params=SamplingParams(**params) if params else None))
         for r in state["finished"]:
             req = Request(request_id=r["request_id"], prompt=r["prompt"],
-                          max_new_tokens=0)
+                          max_new_tokens=0,
+                          arrived_at=r.get("arrived_at", 0.0))
             req.generated = r["generated"]
             req.stop_reason = r.get("stop_reason")
             req.state = RequestState(r.get("state", "finished"))
+            req.first_token_at = r.get("first_token_at", 0.0)
+            req.cached_tokens = r.get("cached_tokens", 0)
             sched.finished.append(req)
         return sched

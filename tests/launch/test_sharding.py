@@ -60,6 +60,69 @@ def test_cache_specs_valid(arch):
     jax.tree.map(check, cache, specs, is_leaf=lambda x: isinstance(x, P))
 
 
+def test_spec_for_axes_divisibility_fallback():
+    """Any dim not divisible by its mesh axis falls back to replicated
+    for THAT dim only — never a lowering failure, never contaminating
+    the dims that do divide."""
+    mesh = fake_mesh((2, 2), ("data", "model"))
+    spec = SH.spec_for_axes(("heads", "mlp"), (5, 8), mesh,
+                            SH.SERVE_RULES)     # 5 % 2 != 0 on "model"
+    assert spec == P(None, "model")            # heads dim fell back; the
+    #                                            "model" axis is then free
+    #                                            for the dividing mlp dim
+    # fully divisible → both rules resolve
+    spec2 = SH.spec_for_axes(("embed", "heads"), (4, 8), mesh,
+                             SH.TRAIN_RULES)
+    assert spec2 == P("data", "model")
+    # an axis already used by an earlier dim is never repeated
+    spec3 = SH.spec_for_axes(("heads", "mlp"), (4, 8), mesh,
+                             SH.SERVE_RULES)
+    assert spec3 == P("model", None)
+    # unknown logical names and rules mapping to absent mesh axes → None
+    spec4 = SH.spec_for_axes(("nonsense", "vocab"), (4, 8),
+                             fake_mesh((4,), ("data",)), SH.SERVE_RULES)
+    assert spec4 == P(None, None)
+
+
+def test_maybe_shard_off_mesh_is_identity():
+    """Layers call maybe_shard unconditionally; with no ambient mesh it
+    must be a no-op returning the SAME array uncommitted."""
+    x = jax.numpy.arange(8.0)
+    y = SH.maybe_shard(x, "model")
+    assert y is x
+    # under an ambient mesh it applies the constraint (divisible dim)
+    with fake_mesh((1,), ("model",)):
+        z = SH.maybe_shard(x, "model")
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+
+
+def test_cache_pspecs_paged_pool_layout():
+    """The serving engine's live pools: ONLY the kv-head dim shards
+    (dim 3 of [L, P, ps, Hkv, D/2]) — pages are a host-global namespace
+    — and the static per-channel scales [Hkv, 1, D] shard to match.
+    Head counts not dividing the model axis fall back to replicated."""
+    mesh = fake_mesh((2, 2), ("data", "model"))
+    cache = {
+        "k_pool": np.zeros((2, 16, 8, 2, 16), np.uint8),
+        "v_pool": np.zeros((2, 16, 8, 2, 16), np.uint8),
+        "k_scale": np.zeros((2, 1, 32), np.float32),
+        "k_zero": np.zeros((2, 1, 32), np.float32),
+        "v_scale": np.zeros((2, 1, 32), np.float32),
+        "v_zero": np.zeros((2, 1, 32), np.float32),
+    }
+    specs = SH.cache_pspecs(cache, mesh)
+    assert specs["k_pool"] == P(None, None, None, "model", None)
+    assert specs["v_pool"] == P(None, None, None, "model", None)
+    for name in ("k_scale", "k_zero", "v_scale", "v_zero"):
+        assert specs[name] == P("model", None, None)
+    # 3 kv heads on a 2-wide model axis → whole pool replicated
+    odd = {"k_pool": np.zeros((2, 16, 8, 3, 16), np.uint8),
+           "k_scale": np.zeros((3, 1, 32), np.float32)}
+    specs_odd = SH.cache_pspecs(odd, mesh)
+    assert specs_odd["k_pool"] == P(None, None, None, None, None)
+    assert specs_odd["k_scale"] == P(None, None, None)
+
+
 def test_batch_spec_pod_axis():
     mesh3 = fake_mesh((2, 2, 2), ("pod", "data", "model"))
     assert SH.batch_spec(mesh3) == P(("pod", "data"))

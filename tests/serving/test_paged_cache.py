@@ -189,6 +189,51 @@ def test_allocate_rejects_when_prefix_pages_cannot_double_as_headroom():
     assert (cache.ref == 0).all()
 
 
+def test_allocate_rolls_back_on_midloop_exhaustion():
+    """``_acquire_page`` failing partway through the acquisition loop
+    must roll back EVERYTHING the call took — adopted prefix refs and
+    already-acquired pages — leaving the block-table row fully unmapped
+    and the pool byte-exact. (Regression: the row assignment used to
+    poison the int32 block table when the acquisition returned None,
+    and the adopted refs leaked.)"""
+    cache = make_prefix_cache(num_pages=8, page_size=4)
+    tokens = list(range(1, 9))                  # 2 full publishable pages
+    assert cache.allocate_seq(0, 8)
+    cache.seq_len[0] = 8
+    cache.publish_prefix(0, tokens)
+    cache.free_seq(0)                           # both pages → reclaimable
+    pages, matched = cache.match_prefix(tokens + [9])
+    assert matched == 8
+    free_before = cache.pages_free
+    ref_before = cache.ref.copy()
+    real = cache._acquire_page
+    calls = {"n": 0}
+
+    def flaky_acquire():                        # 2nd acquisition dies
+        calls["n"] += 1
+        return real() if calls["n"] == 1 else None
+
+    cache._acquire_page = flaky_acquire
+    try:
+        # 2 adopted + 2 acquired needed; the estimate says both
+        # acquisitions fit, but the second one comes back dry
+        ok = cache.allocate_seq(1, 16, prefix_pages=pages, prefix_tokens=8)
+    finally:
+        cache._acquire_page = real
+    assert ok is False and 1 not in cache.active
+    # row fully unmapped: nothing for token_dests/build_work_queue to
+    # trip over later
+    assert (cache.block_table[1] == -1).all()
+    np.testing.assert_array_equal(cache.ref, ref_before)
+    assert cache.pages_free == free_before
+    # the adopted prefix went back to the reclaimable LRU: still
+    # matchable, and a retry with honest acquisitions succeeds
+    pages2, m2 = cache.match_prefix(tokens + [9])
+    assert m2 == 8
+    assert cache.allocate_seq(2, 16, prefix_pages=pages2, prefix_tokens=8)
+    assert (cache.block_table[2, :4] >= 0).all()
+
+
 def test_first_publisher_wins_duplicate_prefix():
     """Two sequences prefill the same prompt concurrently: the second
     publish is a no-op and its pages stay private (freed on exit)."""

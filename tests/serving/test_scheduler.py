@@ -3,6 +3,7 @@ import numpy as np
 
 from repro.configs.base import get_smoke_config
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+from repro.serving.api import RequestState
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -141,11 +142,32 @@ def test_snapshot_restore_roundtrip():
     sched.submit(Request(1, [3], 5, arrived_at=1.0))
     sched.admit(cache)
     sched.running[0].generated = [9]
+    # accounting state that must survive the crash: TTFT stamp and
+    # prefix-hit counts (regression: these used to be dropped, so a
+    # restarted server re-measured TTFT against the recomputed prefill
+    # and lost its hit-rate history)
+    sched.running[0].first_token_at = 123.5
+    sched.running[0].cached_tokens = 8
+    done = Request(2, [7, 7], 1, arrived_at=0.25)
+    done.generated = [42]
+    done.first_token_at = 0.75
+    done.cached_tokens = 2
+    done.stop_reason = "max_tokens"
+    done.state = RequestState.FINISHED
+    sched.finished.append(done)
     blob = sched.snapshot()
     s2 = Scheduler.restore(blob, 4, 8)
     assert len(s2.waiting) == 2
     first = s2.waiting[0]
     assert first.prompt == [1, 2, 9] and first.max_new_tokens == 4
+    assert first.first_token_at == 123.5
+    assert first.cached_tokens == 8
+    second = s2.waiting[1]
+    assert second.first_token_at == 0.0 and second.cached_tokens == 0
+    fin = s2.finished[0]
+    assert fin.arrived_at == 0.25              # was restored as 0.0
+    assert fin.first_token_at == 0.75 and fin.cached_tokens == 2
+    assert fin.generated == [42] and fin.stop_reason == "max_tokens"
 
 
 def test_admit_charges_only_uncached_pages():

@@ -162,6 +162,34 @@ def test_wq_matches_dense_mid_decode_snapshot_restore(setup):
     assert out["work_queue"] == out["dense"]
 
 
+def test_wq_unmapped_page_error_names_caller_seq_ids():
+    """The unmapped-page guard names the CALLER's sequences. Raw
+    ``build_work_queue`` only knows positional batch rows; with
+    ``seq_ids`` (what ``work_queue_np`` threads through) it reports
+    cache slots instead — the batch is usually a non-contiguous slot
+    subset, so positional rows point at the wrong sequence
+    (regression: the message used to call the row index a "seq")."""
+    from repro.configs.base import get_smoke_config
+    from repro.serving.kv_cache import (PagedKV4Cache, PagedKV4Config,
+                                        build_work_queue)
+    tables = np.asarray([[3, 7], [5, -1]], np.int32)   # row 1 unmapped
+    ctx = np.asarray([8, 8])                           # 2 pages @ ps=4
+    with pytest.raises(IndexError, match=r"batch row\(s\) \[1\]"):
+        build_work_queue(tables, ctx, page_size=4, num_kv_heads=2)
+    with pytest.raises(IndexError, match=r"seq slot\(s\) \[9\]"):
+        build_work_queue(tables, ctx, page_size=4, num_kv_heads=2,
+                         seq_ids=[4, 9])
+    # through the cache wrapper: slots (0, 2) are a non-contiguous
+    # subset — the error must name slot 2, not batch row 1
+    cfg = get_smoke_config("llama3_8b")
+    cache = PagedKV4Cache(
+        cfg, PagedKV4Config(num_pages=8, page_size=4, max_seqs=4,
+                            max_pages_per_seq=4), 1)
+    assert cache.allocate_seq(0, 8) and cache.allocate_seq(2, 4)
+    with pytest.raises(IndexError, match=r"seq slot\(s\) \[2\]"):
+        cache.work_queue_np([0, 2], np.asarray([8, 8]))
+
+
 def test_wq_temperature_sampling_deterministic(setup):
     """(request_id, position)-keyed sampling reproduces stochastic text
     under the work-queue schedule too."""
