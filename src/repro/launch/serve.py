@@ -11,14 +11,28 @@ paged-attention grid schedule (Stream-K work queue vs dense baseline);
 ``--abort-every N`` cancels every Nth request mid-flight to exercise
 the abort path; ``--mesh DxM`` (model > 1) turns on tensor-parallel
 sharded serving — heads and int4 KV pools shard over the model axis
-with the scheduler and page allocator staying host-global. The
+with the scheduler and page allocator staying host-global.
+
+Robustness knobs (the fault-tolerant serving core): ``--deadline-ms`` /
+``--ttft-ms`` set per-request deadlines (expired requests end
+``TIMED_OUT``), ``--max-waiting`` bounds the waiting queue (submits past
+it are rejected ``FAILED("queue_full")`` and preemption victims are shed
+instead of re-queued), ``--inject-faults SPEC`` arms a deterministic
+fault schedule (``serving/faults.py`` grammar, e.g.
+``"forward:step=3,action=nan;alloc_page:nth=20"``) to chaos-test the
+step-level isolation, and ``--snapshot-every N`` rides a journaled
+:class:`~repro.serving.recovery.RecoveryLog` along with the run (full
+engine snapshot every N steps + per-token event journal). The
 end-of-run summary reports throughput, prefix-cache hit rate + eviction
-counters, schedule work/grid counters (per shard under TP), and aborted
-counts.
+counters, schedule work/grid counters (per shard under TP), lifecycle
+counts (aborted/failed/timed-out/shed/rejected), and the fired faults.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
       --requests 16 --max-new 32 --stream --prefix-cache on
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
+      --requests 12 --deadline-ms 2000 --max-waiting 4 \
+      --inject-faults "forward:step=5,action=nan;sample:nth=3"
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
       PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b \
       --smoke --mesh 1x2 --head-dim 64 --int4-fraction 1.0
@@ -84,6 +98,24 @@ def main():
     ap.add_argument("--abort-every", type=int, default=0,
                     help="abort every Nth request after its first token "
                          "(0 = never) — exercises the abort path")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request wall-clock deadline (0 = none): "
+                         "expired requests end TIMED_OUT with partial "
+                         "output retained")
+    ap.add_argument("--ttft-ms", type=float, default=0,
+                    help="per-request first-token budget (0 = none)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound on the waiting queue (0 = unbounded): "
+                         "submits past it are rejected (queue_full) and "
+                         "preemption victims are shed, not re-queued")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic fault schedule (serving/faults.py "
+                         "grammar), e.g. 'forward:step=3,action=nan;"
+                         "alloc_page:nth=20' — chaos-tests step isolation")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="journaled crash recovery: full engine snapshot "
+                         "every N steps + per-token event journal "
+                         "(0 = off)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="submit one request every N engine steps "
                          "(0 = all up front). Staggered arrivals let "
@@ -139,8 +171,14 @@ def main():
         unified_step=(args.step_mode == "unified"),
         prefix_cache=(args.prefix_cache == "on"),
         attention_schedule=args.attention_schedule,
-        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None)),
+        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None),
+        max_waiting=(args.max_waiting or None),
+        inject_faults=(args.inject_faults or None)),
         mesh=mesh, param_axes=qaxes)
+    log = None
+    if args.snapshot_every:
+        from repro.serving.recovery import RecoveryLog
+        log = RecoveryLog(eng, snapshot_every=args.snapshot_every)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -151,7 +189,9 @@ def main():
               "so the shared prefix can never hit — shrink --page-size or "
               "grow the prefix", flush=True)
     sp = SamplingParams(max_new_tokens=args.max_new,
-                        temperature=args.temperature, top_k=args.top_k)
+                        temperature=args.temperature, top_k=args.top_k,
+                        deadline_ms=(args.deadline_ms or None),
+                        ttft_ms=(args.ttft_ms or None))
     prompts = []
     for _ in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
@@ -170,8 +210,12 @@ def main():
             submitted += 1
             if args.abort_every and submitted % args.abort_every == 0:
                 abort_ids.add(h.request_id)
-        eng.step()
-        for ev in eng.events():
+        if log is not None:
+            evs = log.step()
+        else:
+            eng.step()
+            evs = eng.events()
+        for ev in evs:
             if ev.token is not None and ev.request_id in abort_ids:
                 eng.abort(ev.request_id)       # cancel after first token
                 abort_ids.discard(ev.request_id)
@@ -201,6 +245,21 @@ def main():
           f"from published pages); evicted={eng.cache.prefix_evicted_pages} "
           f"pages; reclaimable={eng.cache.prefix_reclaimable_bytes}B; "
           f"aborted={eng.aborted_count}", flush=True)
+    print(f"[robust] failed={eng.failed_count} timed_out={eng.timeout_count} "
+          f"shed={eng.shed_count} rejected={eng.rejected_count} "
+          f"callback_errors={eng.callback_errors} "
+          f"internal_errors={eng.internal_errors} "
+          f"released={eng.sched.released_count}", flush=True)
+    if eng.faults.faults:
+        fired = [f"{p}:{a}@step{s}" for p, a, s in eng.faults.fired]
+        print(f"[faults] armed: {eng.faults.describe()}; "
+              f"fired: {', '.join(fired) or '(none)'}; "
+              f"pending: {len(eng.faults.pending)}", flush=True)
+    if log is not None:
+        print(f"[recovery] journal={len(log.journal)} events, "
+              f"snapshot@step{log._snapshot_step} "
+              f"(every {log.snapshot_every}), replayed={log.replayed}",
+              flush=True)
     if eng.attn_forwards:
         waste = eng.attn_grid_items - eng.attn_work_items
         dense_waste = eng.attn_dense_grid_items - eng.attn_work_items

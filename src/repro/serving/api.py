@@ -23,17 +23,40 @@ value types of that surface; the verbs live on ``Engine``:
 Lifecycle (``RequestState``)::
 
     QUEUED → PREFILLING → DECODING → FINISHED(stop_reason)
-       └──────────┴───────────┴────→ ABORTED        (abort() anywhere)
+       │         │            │
+       │         ├────────────┴────→ FAILED(error)   (step-level fault)
+       ├─────────┴────────────┴────→ TIMED_OUT       (deadline/TTFT)
+       └─────────┴────────────┴────→ ABORTED         (abort() anywhere)
 
 Preemption moves a running request back to QUEUED (its pages are
 dropped; re-admission re-prefills — with the prefix cache warm, its own
 already-published prompt pages are a hit and only the tail re-forwards).
 
+Failure is a per-request outcome, never an engine crash: an exception
+in the forward or sampler, or a non-finite logits row, quarantines the
+affected request(s) to ``FAILED`` (the error in ``stop_reason``) with
+refcount-exact page release while the rest of the batch keeps decoding
+— ``Engine.step()`` never propagates a per-request failure. Two more
+paths land in ``FAILED`` with a policy reason instead of an error:
+``"queue_full"`` (submit against a full bounded waiting queue — the
+handle comes back already terminal) and ``"shed"`` (a preemption victim
+dropped under load instead of re-queued, after the reclaimable prefix
+LRU has already been drained). Requests carrying a
+:class:`SamplingParams` deadline expire to ``TIMED_OUT``
+(``stop_reason`` ``"deadline"`` or ``"ttft_budget"``) with partial
+output retained and pages freed exactly. Deterministic fault schedules
+for all of these live in ``serving/faults.py``; journaled crash
+recovery (periodic full snapshots + a per-token event journal with
+exactly-once redelivery) lives in ``serving/recovery.py``.
+
 Event contract: every sampled token is emitted exactly once, in
 generation order, so the concatenation of a request's token events
 always equals its final output (``tests/serving/test_api.py`` pins
 this, including across preemptions, where earlier tokens are folded
-into the re-queued prompt).
+into the re-queued prompt). Every submitted request emits exactly ONE
+terminal event, and no token event ever follows it — the chaos suite
+(``tests/serving/test_faults.py``) pins both under seeded fault
+schedules.
 """
 
 from __future__ import annotations
@@ -59,11 +82,23 @@ class SamplingParams:
     top_k: candidate pool for temperature sampling (ignored when
         greedy). Per-row: one batched sampler call serves a batch that
         mixes greedy and stochastic requests with different k.
+    deadline_ms: wall-clock budget for the WHOLE request, measured from
+        submit. A request past its deadline — waiting or running — is
+        expired to ``TIMED_OUT`` (``stop_reason="deadline"``) at the
+        next step boundary, partial output retained, pages freed
+        exactly. ``None`` (default) = no deadline.
+    ttft_ms: budget for the FIRST token only, also from submit: a
+        request still tokenless past it times out with
+        ``stop_reason="ttft_budget"`` (an SLO guard — a request that
+        cannot start in time should release the queue slot it is
+        holding). ``None`` = no TTFT budget.
     """
 
     max_new_tokens: int = 16
     temperature: float = 0.0
     top_k: int = 40
+    deadline_ms: Optional[float] = None
+    ttft_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
@@ -72,6 +107,10 @@ class SamplingParams:
             raise ValueError("temperature must be >= 0")
         if self.top_k < 1:
             raise ValueError("top_k must be >= 1")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0 (None = no deadline)")
+        if self.ttft_ms is not None and self.ttft_ms <= 0:
+            raise ValueError("ttft_ms must be > 0 (None = no budget)")
 
 
 class RequestState(str, enum.Enum):
@@ -82,18 +121,26 @@ class RequestState(str, enum.Enum):
     DECODING = "decoding"        # prompt resident, generating tokens
     FINISHED = "finished"        # completed (stop_reason says why)
     ABORTED = "aborted"          # cancelled via Engine.abort()
+    FAILED = "failed"            # quarantined by a step-level failure
+    #                              (stop_reason carries the error), or
+    #                              rejected ("queue_full") / load-shed
+    #                              ("shed") under pressure
+    TIMED_OUT = "timed_out"      # deadline_ms / ttft_ms expired
 
     @property
     def terminal(self) -> bool:
-        return self in (RequestState.FINISHED, RequestState.ABORTED)
+        return self in (RequestState.FINISHED, RequestState.ABORTED,
+                        RequestState.FAILED, RequestState.TIMED_OUT)
 
 
 @dataclasses.dataclass(frozen=True)
 class RequestOutput:
     """One streamed event. ``token is not None`` → a newly sampled token
     (exactly one event per token, in order); ``finished`` → the terminal
-    event (state FINISHED or ABORTED, ``stop_reason`` set for caps/
-    aborts, ``None`` for a clean max_new_tokens completion)."""
+    event (state FINISHED / ABORTED / FAILED / TIMED_OUT; ``stop_reason``
+    set for caps, aborts, failures, and timeouts — ``None`` for a clean
+    max_new_tokens completion). Exactly one terminal event per request,
+    always last."""
 
     request_id: int
     state: RequestState

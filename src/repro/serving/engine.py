@@ -108,18 +108,48 @@ Supported families here: dense, moe (the paper's evaluation set —
 LLaMA/Qwen/Mistral class + MoE). Hybrid/ssm decode serve through
 ``LM.decode`` (their state is O(1) — paging buys nothing).
 
-Fault tolerance: ``snapshot()`` captures scheduler state; ``Engine.
+**Fault tolerance.** ``step()`` never propagates a per-request failure:
+an exception in the forward (or an ``InjectedFault`` from the
+``serving/faults.py`` harness — armed via ``EngineConfig.inject_faults``
+or an explicit ``faults=`` injector) quarantines every request in that
+step's batch to ``FAILED`` with refcount-exact page release, a sampler
+exception or a non-finite logits row quarantines exactly the rows being
+sampled, and requests outside the failed batch keep decoding. A
+throwing ``on_event`` callback is detached (``callback_errors``), never
+fatal. Per-request deadlines (``SamplingParams.deadline_ms`` /
+``ttft_ms``) are enforced at every step boundary BEFORE admission —
+expired requests land in ``TIMED_OUT`` with partial output retained.
+Under pressure the engine degrades instead of stalling: the allocator
+drains the reclaimable prefix LRU before any preemption, a bounded
+waiting queue (``EngineConfig.max_waiting``) rejects at submit
+(``FAILED("queue_full")``, the handle returns already terminal), and a
+preemption victim that cannot re-queue is shed (``FAILED("shed")``).
+Counters: ``failed_count``, ``timeout_count``, ``shed_count``,
+``rejected_count``, ``internal_errors``, ``callback_errors``. An
+unexpected exception anywhere else in the step is swallowed into
+``internal_errors``/``last_error`` — the serving loop survives
+everything. These guards cover the unified step (the default); the
+split/whole/gather fig11 baselines rely on the outer backstop only.
+
+Crash recovery: ``snapshot()`` captures scheduler state; ``Engine.
 restore`` rebuilds mid-flight work after a crash (prompts re-prefill
 from ``prefill_pos=0`` — partial prefill is device KV, lost with the
 node). Sampling is keyed by (request_id, position), but regenerated text
 is not bit-identical in general: re-prefill attends in fp while decode
 attends over the int4 pages, so greedy argmax can flip on near-ties.
+``snapshot(full=True)`` instead captures EVERYTHING — int4 pool bytes,
+allocator free-list/LRU order, the exact waiting/running split and
+cursors — so ``restore`` of a full blob resumes the very next step
+bit-identically (nothing re-prefills); ``serving/recovery.py`` pairs it
+with a per-token event journal for exactly-once redelivery and a
+bitwise replay check.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import time
 from typing import Optional
 
@@ -141,6 +171,7 @@ from repro.parallel import sharding as SH
 from repro.serving import kv_cache as KVC
 from repro.serving.api import (RequestHandle, RequestOutput, RequestState,
                                SamplingParams)
+from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
 from repro.serving.scheduler import Request, Scheduler
 
@@ -229,8 +260,17 @@ class EngineConfig:
     #                                  the measured fig10 baseline)
     prefix_cache_max_bytes: Optional[int] = None  # byte cap on the
     #                                  reclaimable prefix-page LRU
+    max_waiting: Optional[int] = None  # bound on the waiting queue —
+    #                                  submits past it are rejected
+    #                                  (FAILED "queue_full") and preempt
+    #                                  victims are shed, not re-queued
+    inject_faults: Optional[str] = None  # fault schedule spec
+    #                                  (serving/faults.py grammar), e.g.
+    #                                  "forward:step=3,action=nan"
 
     def __post_init__(self):
+        if self.max_waiting is not None and self.max_waiting < 1:
+            raise ValueError("max_waiting must be >= 1 (None = unbounded)")
         if self.decode_attention not in ("paged", "gather"):
             raise ValueError(
                 f"decode_attention must be 'paged' or 'gather', got "
@@ -263,7 +303,7 @@ class EngineConfig:
 class Engine:
     def __init__(self, cfg: ModelConfig, qparams, quant: QuantConfig,
                  ecfg: EngineConfig = EngineConfig(), *,
-                 mesh=None, param_axes=None):
+                 mesh=None, param_axes=None, faults=None, clock=time.time):
         """``mesh``/``param_axes`` (both optional) turn on tensor-parallel
         sharded serving: a ``(data, model)`` mesh whose "model" axis > 1
         shards projection weights and the int4 KV pools over kv heads
@@ -271,7 +311,13 @@ class Engine:
         :meth:`_unified_forward`). ``param_axes`` is the logical-axes
         tree ``LM.quantize`` returns alongside ``qparams`` — required
         whenever the model axis is sharded. A mesh with model == 1 (or
-        ``mesh=None``) is the single-device engine, unchanged."""
+        ``mesh=None``) is the single-device engine, unchanged.
+
+        ``faults``: a :class:`FaultInjector` to ride along (chaos tests
+        hand one in directly; ``ecfg.inject_faults`` builds one from the
+        CLI spec grammar). ``clock``: the wall-clock source for arrival
+        stamps and deadline enforcement — injectable so deadline tests
+        are deterministic."""
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine supports dense/moe; {cfg.family} serves via "
@@ -294,7 +340,16 @@ class Engine:
                 reclaimable_max_bytes=ecfg.prefix_cache_max_bytes),
             num_layer_slots=cfg.num_layers,
             kv_range=ecfg.kv_range)
-        self.sched = Scheduler(ecfg.max_batch, ecfg.max_batch * 2)
+        self.sched = Scheduler(ecfg.max_batch, ecfg.max_batch * 2,
+                               max_waiting=ecfg.max_waiting)
+        self.clock = clock
+        # fault-injection harness (serving/faults.py): shared with the
+        # cache so alloc_page/append_kv fire at their real call sites
+        if faults is None:
+            faults = (FaultInjector.from_spec(ecfg.inject_faults)
+                      if ecfg.inject_faults else FaultInjector())
+        self.faults = faults
+        self.cache.faults = faults
         self.steps = 0
         self.tokens_generated = 0
         # observability: largest fp-token prefill forward issued (bounded
@@ -313,6 +368,17 @@ class Engine:
         self.prefix_hit_tokens = 0
         self.prefill_tokens = 0
         self.aborted_count = 0
+        # robustness counters: step-level quarantines, deadline/TTFT
+        # expiries, load-shed preemption victims, bounded-queue submit
+        # rejections, throwing on_event callbacks (detached, not fatal),
+        # and the last-resort backstop for unexpected step exceptions
+        self.failed_count = 0
+        self.timeout_count = 0
+        self.shed_count = 0
+        self.rejected_count = 0
+        self.callback_errors = 0
+        self.internal_errors = 0
+        self.last_error: Optional[str] = None
         # attention-schedule counters (fig10 measured ablation): real
         # work items (Σ real pages + chunk items, per kv head — equal
         # under both schedules), grid items actually launched (dense:
@@ -426,7 +492,13 @@ class Engine:
 
         ``params`` defaults to the engine-wide sampling configuration;
         ``on_event`` is an optional push callback invoked with every
-        :class:`RequestOutput` the request emits."""
+        :class:`RequestOutput` the request emits.
+
+        Backpressure: with ``EngineConfig.max_waiting`` set and the
+        waiting queue full, the request is rejected — the returned
+        handle resolves to a request already terminal in ``FAILED``
+        with ``stop_reason="queue_full"`` (terminal event emitted, no
+        pages or slots ever held)."""
         if params is None:
             params = SamplingParams(temperature=self.ecfg.temperature,
                                     top_k=self.ecfg.top_k)
@@ -439,10 +511,15 @@ class Engine:
             raise ValueError(f"request_id {request_id} already in flight")
         req = Request(
             request_id=request_id, prompt=list(prompt),
-            max_new_tokens=params.max_new_tokens, arrived_at=time.time(),
+            max_new_tokens=params.max_new_tokens, arrived_at=self.clock(),
             params=params, on_event=on_event)
         self._by_id[request_id] = req
-        self.sched.submit(req)
+        if self.sched.waiting_full:
+            self.sched.reject(req)
+            self.rejected_count += 1
+            self._emit(req)
+        else:
+            self.sched.submit(req)
         return RequestHandle(request_id=request_id, prompt_len=len(prompt))
 
     def _resolve(self, handle) -> Optional[Request]:
@@ -531,17 +608,59 @@ class Engine:
             self.step()
         return self.sched.finished
 
-    def snapshot(self) -> str:
+    def snapshot(self, full: bool = False) -> str:
+        """Serialize engine state for crash recovery.
+
+        Legacy mode (default): scheduler-only — running work demotes to
+        waiting and re-prefills on restore (device KV lost with the
+        node); continuation is plausible but not bit-identical.
+
+        ``full=True``: the journaled-recovery blob — the exact
+        scheduler split/cursors (``Scheduler.snapshot(full=True)``) plus
+        the entire cache (``PagedKV4Cache.snapshot_state``: int4 pool
+        bytes, block tables, free-list and prefix-LRU order). A restore
+        resumes the very next step bit-identically."""
+        if full:
+            return json.dumps({
+                "format": "engine_full",
+                "sched": self.sched.snapshot(full=True),
+                "cache": self.cache.snapshot_state(),
+                "steps": self.steps,
+                "tokens_generated": self.tokens_generated,
+                "next_id": self._next_id,
+            })
         return self.sched.snapshot()
 
     @classmethod
     def restore(cls, blob: str, cfg, qparams, quant,
                 ecfg: EngineConfig = EngineConfig(), *,
-                mesh=None, param_axes=None) -> "Engine":
+                mesh=None, param_axes=None, faults=None,
+                clock=time.time) -> "Engine":
         eng = cls(cfg, qparams, quant, ecfg, mesh=mesh,
-                  param_axes=param_axes)
+                  param_axes=param_axes, faults=faults, clock=clock)
+        state = json.loads(blob)
+        if isinstance(state, dict) and state.get("format") == "engine_full":
+            eng.sched = Scheduler.restore(
+                state["sched"], ecfg.max_batch, ecfg.max_batch * 2,
+                max_waiting=ecfg.max_waiting)
+            eng.cache.restore_state(state["cache"])
+            if eng.tp_size > 1:
+                # restore_state loads host pools; re-lay them out over
+                # the mesh (kv-head sharding) for the sharded forward
+                put = lambda a: jax.device_put(
+                    a, NamedSharding(eng.mesh, eng._pool_pspec))
+                eng.cache.k_pool = put(eng.cache.k_pool)
+                eng.cache.v_pool = put(eng.cache.v_pool)
+            eng.steps = state["steps"]
+            eng.tokens_generated = state["tokens_generated"]
+            eng._next_id = state["next_id"]
+            eng._by_id = {r.request_id: r for r in
+                          list(eng.sched.waiting) + eng.sched.running
+                          + eng.sched.finished}
+            return eng
         eng.sched = Scheduler.restore(blob, ecfg.max_batch,
-                                      ecfg.max_batch * 2)
+                                      ecfg.max_batch * 2,
+                                      max_waiting=ecfg.max_waiting)
         eng._by_id = {r.request_id: r for r in
                       list(eng.sched.waiting) + eng.sched.finished}
         return eng
@@ -549,6 +668,17 @@ class Engine:
     # ----------------------------------------------------------- events
 
     def _emit(self, req: Request, token: Optional[int] = None):
+        """Single event choke point. A terminal event (``token is
+        None``) is emitted at most once per request — the exactly-one-
+        terminal contract holds even when several failure paths race to
+        finish the same request in one step. ``on_event`` delivery is
+        guarded: a throwing callback (or an injected ``emit_event``
+        fault) is detached and counted, never fatal, and the event log
+        keeps the event either way."""
+        if token is None:
+            if req.terminal_emitted:
+                return
+            req.terminal_emitted = True
         out = RequestOutput(
             request_id=req.request_id, state=req.state, token=token,
             num_generated=len(req.generated), stop_reason=req.stop_reason,
@@ -556,19 +686,30 @@ class Engine:
         self._events.append(out)
         req.events.append(out)
         if req.on_event is not None:
-            req.on_event(out)
+            try:
+                if self.faults.check("emit_event"):
+                    raise InjectedFault(
+                        "emit_event: injected callback failure")
+                req.on_event(out)
+            except Exception:
+                self.callback_errors += 1
+                req.on_event = None
 
     def _record_token(self, req: Request, tok: int):
         """Single choke point for a sampled token: append, stamp TTFT,
-        flip PREFILLING→DECODING, and emit the streaming event."""
+        flip PREFILLING→DECODING, and emit the streaming event.
+        ``emitted`` is the request's LIFETIME token-event count (unlike
+        ``len(generated)``, it survives the preemption fold) — the
+        journal's per-request delivery cursor."""
         if req.state.terminal:
             # reentrant abort: an on_event callback cancelled this
             # request earlier in the same step's sampling loop — its
             # terminal event must stay last, so drop the token
             return
         req.generated.append(int(tok))
+        req.emitted += 1
         if not req.first_token_at:      # preserve TTFT across preemptions
-            req.first_token_at = time.time()
+            req.first_token_at = self.clock()
         if req.state == RequestState.PREFILLING:
             req.state = RequestState.DECODING
         self.tokens_generated += 1
@@ -578,10 +719,46 @@ class Engine:
         self.sched.complete(req, self.cache)
         self._emit(req)
 
+    def _fail(self, req: Request, reason: str):
+        """Quarantine one request after a step-level failure: pages
+        released refcount-exactly, terminal FAILED event, counted."""
+        if self.sched.fail(req, self.cache, reason):
+            self.failed_count += 1
+            self._emit(req)
+
+    def _preempt_one(self) -> Optional[Request]:
+        """Preempt the youngest runnable sequence; when the bounded
+        waiting queue is full the scheduler sheds the victim instead of
+        re-queueing it — count it and emit its terminal event here."""
+        victim = self.sched.preempt_one(self.cache)
+        if victim is not None and victim.state.terminal:
+            self.shed_count += 1
+            self._emit(victim)
+        return victim
+
     # ----------------------------------------------------------------- step
 
     def step(self):
+        """Advance every in-flight request one scheduling quantum.
+
+        NEVER raises: per-request failures are quarantined inside
+        (``_forward_step``'s guards), and anything unexpected that still
+        escapes is swallowed into ``internal_errors``/``last_error`` —
+        one poisoned step must not take down the serving loop."""
         self.steps += 1
+        self.faults.begin_step(self.steps)
+        try:
+            self._step_inner()
+        except Exception as e:  # noqa: BLE001 — the serving-loop backstop
+            self.internal_errors += 1
+            self.last_error = repr(e)
+
+    def _step_inner(self):
+        # deadline/TTFT expiry runs BEFORE admission: a dead-on-arrival
+        # request must never acquire pages just to be torn down
+        for req in self.sched.expire_deadlines(self.cache, self.clock()):
+            self.timeout_count += 1
+            self._emit(req)
         chunked = self.ecfg.prefill_mode == "chunked"
         nfin = len(self.sched.finished)
         admitted = self.sched.admit(
@@ -623,7 +800,7 @@ class Engine:
             # decodable, free pages so the next step can move
             stuck = [r for r in self.sched.running if not r.prefilled]
             if stuck and not any(r.prefilled for r in self.sched.running):
-                self.sched.preempt_one(self.cache)
+                self._preempt_one()
             return
         if plan and decode:
             self.interleaved_steps += 1
@@ -641,7 +818,7 @@ class Engine:
                 stuck = [r for r in self.sched.running if not r.prefilled]
                 if stuck and not any(r.prefilled
                                      for r in self.sched.running):
-                    self.sched.preempt_one(self.cache)
+                    self._preempt_one()
             prefill_ran = bool(plan)
         else:
             for req in admitted:
@@ -683,7 +860,7 @@ class Engine:
                 r.stop_reason = "length_cap"
                 self._complete(r)
                 continue
-            victim = self.sched.preempt_one(self.cache)
+            victim = self._preempt_one()
             if victim is None:
                 continue            # nothing to evict — stall r this step
             if victim in pending:
@@ -772,7 +949,19 @@ class Engine:
         serves, so the union needs no second attention dataflow. The
         packed layout is bucketed (powers of two) so repeated steps hit
         the jit cache; padding tokens scatter to out-of-range pages
-        (dropped) and pad rows have qlen 0 (masked)."""
+        (dropped) and pad rows have qlen 0 (masked).
+
+        Failure isolation: everything from destination resolution
+        through the forward runs under a guard — an exception there
+        (including injected ``append_kv``/``forward`` faults)
+        quarantines every request in THIS batch to FAILED and returns;
+        requests outside the batch are untouched. Page accounting stays
+        exact because all host state (prefill_pos, seq_len, advance)
+        only moves AFTER the forward succeeds, so ``free_seq`` on a
+        quarantined row returns the pools to baseline. After the
+        forward, a per-row non-finite guard fails exactly the rows
+        whose logits are NaN/Inf, and the sampler runs under its own
+        guard (rows mid-prefill are never touched by either)."""
         rows = list(plan) + [
             (r, int(self.cache.seq_len[r.seq_slot]), 1) for r in decode]
         starts = np.asarray([s for _, s, _ in rows])
@@ -788,8 +977,81 @@ class Engine:
         tokens = np.concatenate(
             [np.asarray(r.prompt[s:s + t]) for r, s, t in plan]
             + [[r.generated[-1]] for r in decode]).astype(np.int64)
-        pages_np, offs_np = self.cache.token_dests_np(slots[tok_seq], tok_pos)
+        try:
+            logits, nan_fault = self._guarded_forward(
+                plan, rows, starts, takes, slots, nseq, cmax, ttot, cum,
+                tok_seq, tok_off, tok_pos, tokens)
+        except Exception as e:  # noqa: BLE001 — batch-granular quarantine
+            for r, _, _ in rows:
+                self._fail(r, f"forward: {e!r}")
+            return
 
+        # host state: prompt progress + decode appends; a completed
+        # prompt publishes its full pages into the prefix index
+        for r, s, t in plan:
+            r.prefill_pos = s + t
+            self.cache.seq_len[r.seq_slot] = r.prefill_pos
+            if self.ecfg.prefix_caching and r.prefill_pos == len(r.prompt):
+                self.cache.publish_prefix(r.seq_slot, r.prompt)
+        self.cache.advance([r.seq_slot for r in decode])
+
+        # one vectorized sample over finished-prefill rows ∪ decode rows
+        need = [(si, r, len(r.prompt))
+                for si, (r, s, t) in enumerate(plan)
+                if s + t == len(r.prompt)]
+        need += [(len(plan) + j, r, r.total_len)
+                 for j, r in enumerate(decode)]
+        if not need:
+            return
+        if nan_fault is not None:
+            # injected NaN lands on a row actually being sampled (row
+            # clamped into `need`), so the schedule reliably exercises
+            # the guard below
+            logits[need[min(nan_fault.row, len(need) - 1)][0], :] = np.nan
+        # per-row non-finite guard: a NaN/Inf logits row — injected or
+        # real — quarantines exactly that request; finite rows sample on
+        finite = np.isfinite(
+            logits[[si for si, _, _ in need]]).all(axis=-1)
+        if not finite.all():
+            for (_, r, _), ok in zip(need, finite):
+                if not ok:
+                    self._fail(r, "non_finite_logits")
+            need = [t for t, ok in zip(need, finite) if ok]
+            if not need:
+                return
+        self._sample_rows(logits, need)
+
+    def _sample_rows(self, logits: np.ndarray, need: list):
+        """Guarded batched sampling: a sampler exception (or injected
+        ``sample`` fault) fails exactly the rows being sampled — rows
+        mid-prefill never reach here."""
+        try:
+            if self.faults.check("sample"):
+                raise InjectedFault("sample: injected sampler failure")
+            toks = self._sample_batch(
+                logits[[si for si, _, _ in need]],
+                [r for _, r, _ in need],
+                [p for _, _, p in need])
+        except Exception as e:  # noqa: BLE001 — row-granular quarantine
+            for _, r, _ in need:
+                self._fail(r, f"sample: {e!r}")
+            return
+        for (_, r, _), tok in zip(need, toks):
+            self._record_token(r, tok)
+
+    def _guarded_forward(self, plan, rows, starts, takes, slots, nseq,
+                         cmax, ttot, cum, tok_seq, tok_off, tok_pos,
+                         tokens):
+        """The fault-guarded section of :meth:`_forward_step`:
+        destination resolution (the ``append_kv`` fault point), shape
+        bucketing, and the ONE forward (the ``forward`` fault point —
+        ``raise`` aborts here; ``nan`` returns the armed fault so the
+        caller corrupts a sampled row). Returns (writable logits
+        ndarray, nan_fault). No host scheduler/cache bookkeeping moves
+        in here — an exception leaves page accounting untouched, so the
+        caller's quarantine frees back to baseline."""
+        pages_np, offs_np = self.cache.token_dests_np(slots[tok_seq],
+                                                      tok_pos)
         # shape buckets — the jit cache key
         tb = _bucket(ttot, lo=8)
         nb = _bucket(nseq)
@@ -843,6 +1105,12 @@ class Engine:
             self.attn_dense_grid_items += nb * hkv * (npb + 1)
             self.attn_grid_items += (desc_np.shape[0] * self.tp_size if wq
                                      else nb * hkv * (npb + 1))
+        nan_fault = None
+        fwd_fault = self.faults.check("forward")
+        if fwd_fault is not None:
+            if fwd_fault.action == "raise":
+                raise InjectedFault("forward: injected forward failure")
+            nan_fault = fwd_fault
         logits, k_pool, v_pool = self._fwd(
             cb, no_history, schedule, self.params, self.cache.k_pool,
             self.cache.v_pool,
@@ -868,31 +1136,9 @@ class Engine:
             self.cache.k_scale, self.cache.k_zero,
             self.cache.v_scale, self.cache.v_zero)
         self.cache.k_pool, self.cache.v_pool = k_pool, v_pool
-        logits = np.asarray(logits)
-
-        # host state: prompt progress + decode appends; a completed
-        # prompt publishes its full pages into the prefix index
-        for r, s, t in plan:
-            r.prefill_pos = s + t
-            self.cache.seq_len[r.seq_slot] = r.prefill_pos
-            if self.ecfg.prefix_caching and r.prefill_pos == len(r.prompt):
-                self.cache.publish_prefix(r.seq_slot, r.prompt)
-        self.cache.advance([r.seq_slot for r in decode])
-
-        # one vectorized sample over finished-prefill rows ∪ decode rows
-        need = [(si, r, len(r.prompt))
-                for si, (r, s, t) in enumerate(plan)
-                if s + t == len(r.prompt)]
-        need += [(len(plan) + j, r, r.total_len)
-                 for j, r in enumerate(decode)]
-        if not need:
-            return
-        toks = self._sample_batch(
-            logits[[si for si, _, _ in need]],
-            [r for _, r, _ in need],
-            [p for _, _, p in need])
-        for (_, r, _), tok in zip(need, toks):
-            self._record_token(r, tok)
+        # np.array (copy): the device buffer view is read-only and the
+        # caller mutates rows in place (nan injection)
+        return np.array(logits), nan_fault
 
     def _unified_forward(self, cmax: int, no_history: bool, schedule: str,
                          params, k_pool, v_pool, tokens, positions, pages,

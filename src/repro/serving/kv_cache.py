@@ -66,8 +66,10 @@ the benchmark baseline and for tests.
 
 from __future__ import annotations
 
+import base64
 import dataclasses
 import hashlib
+import json
 from collections import OrderedDict
 from typing import Optional
 
@@ -76,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serving.faults import InjectedFault
 
 __all__ = ["PagedKV4Config", "PagedKV4Cache", "build_work_queue",
            "quantize_kv_with", "qdq_kv_with"]
@@ -253,6 +256,9 @@ class PagedKV4Cache:
         # (K + V across the layer stack) and lifetime eviction count
         self.page_bytes = 2 * num_layer_slots * pcfg.page_size * hkv * (d // 2)
         self.prefix_evicted_pages = 0
+        # optional FaultInjector (serving/faults.py) the engine shares
+        # with the cache; consulted at alloc_page / append_kv
+        self.faults = None
 
     # ------------------------------------------------------------- allocator
 
@@ -282,6 +288,8 @@ class PagedKV4Cache:
         (and its index entry) if the free list is empty. Eviction runs
         BEFORE any scheduler preemption can fire: allocation only fails
         once both pools are dry."""
+        if self.faults is not None and self.faults.check("alloc_page"):
+            return None         # injected exhaustion — same shape as dry
         if self.free_pages:
             p = self.free_pages.pop()
         else:
@@ -537,6 +545,8 @@ class PagedKV4Cache:
         The unified engine pads these up to its shape bucket (padding
         tokens get an out-of-range page id whose scatter update is
         dropped) before shipping them to the device once per step."""
+        if self.faults is not None and self.faults.check("append_kv"):
+            raise InjectedFault("append_kv: injected destination failure")
         seq_ids = np.atleast_1d(np.asarray(seq_ids))
         pos = np.atleast_1d(np.asarray(positions))
         ps = self.pcfg.page_size
@@ -584,6 +594,72 @@ class PagedKV4Cache:
     def advance(self, seq_ids):
         for s in np.atleast_1d(seq_ids):
             self.seq_len[s] += 1
+
+    # ---------------------------------------------- full-state snapshot
+
+    def snapshot_state(self) -> str:
+        """Serialize the ENTIRE cache — device pools included — for
+        journaled crash recovery (``serving/recovery.py``).
+
+        The legacy engine restore path re-prefills demoted requests, and
+        a re-prefill runs the in-flight chunk in fp — numerics that can
+        differ from the int4-history decode path by enough to flip a
+        greedy argmax. Bitwise-identical continuation therefore needs
+        the pools' int4 bytes verbatim, plus every piece of host
+        allocator state *in iteration order* (free-list order and
+        reclaimable-LRU order both steer future page assignment)."""
+        pools = {
+            "k": base64.b64encode(np.asarray(self.k_pool).tobytes()).decode(),
+            "v": base64.b64encode(np.asarray(self.v_pool).tobytes()).decode(),
+        }
+        return json.dumps({
+            "pool_shape": list(self.k_pool.shape),
+            "pools": pools,
+            "block_table": self.block_table.tolist(),
+            "seq_len": self.seq_len.tolist(),
+            "page_count": self.page_count.tolist(),
+            "free_pages": list(self.free_pages),
+            "ref": self.ref.tolist(),
+            "active": sorted(self.active),
+            "prefix_index": {k.hex(): int(v)
+                             for k, v in self.prefix_index.items()},
+            "page_key": {int(p): k.hex() for p, k in self.page_key.items()},
+            "reclaimable": [[int(p), k.hex()]
+                            for p, k in self._reclaimable.items()],
+            "prefix_evicted_pages": self.prefix_evicted_pages,
+        })
+
+    def restore_state(self, blob: str):
+        """Load a :meth:`snapshot_state` blob into THIS cache (built with
+        the same configs — pool shape is validated). After this, decode
+        resumes with the exact pool bytes and allocator order the
+        snapshotted engine had."""
+        state = json.loads(blob)
+        shape = tuple(state["pool_shape"])
+        if shape != tuple(self.k_pool.shape):
+            raise ValueError(
+                f"snapshot pool shape {shape} != cache pool shape "
+                f"{tuple(self.k_pool.shape)} — restore needs an "
+                "identically-configured cache")
+        k = np.frombuffer(base64.b64decode(state["pools"]["k"]),
+                          np.uint8).reshape(shape)
+        v = np.frombuffer(base64.b64decode(state["pools"]["v"]),
+                          np.uint8).reshape(shape)
+        self.k_pool = jnp.asarray(k)
+        self.v_pool = jnp.asarray(v)
+        self.block_table = np.asarray(state["block_table"], np.int32)
+        self.seq_len = np.asarray(state["seq_len"], np.int32)
+        self.page_count = np.asarray(state["page_count"], np.int32)
+        self.free_pages = list(state["free_pages"])
+        self.ref = np.asarray(state["ref"], np.int32)
+        self.active = set(state["active"])
+        self.prefix_index = {bytes.fromhex(k): int(v)
+                             for k, v in state["prefix_index"].items()}
+        self.page_key = {int(p): bytes.fromhex(k)
+                         for p, k in state["page_key"].items()}
+        self._reclaimable = OrderedDict(
+            (int(p), bytes.fromhex(k)) for p, k in state["reclaimable"])
+        self.prefix_evicted_pages = state.get("prefix_evicted_pages", 0)
 
     # -------------------------------------------------- block-table views
 

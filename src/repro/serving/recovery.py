@@ -1,0 +1,200 @@
+"""Journaled crash recovery: full snapshots + a per-token event journal.
+
+The engine's legacy ``snapshot``/``restore`` seam survives a crash by
+demoting running work to waiting and re-prefilling it — correct, but not
+bit-identical (re-prefill attends the in-flight chunk in fp, decode
+reads int4 pages back; greedy argmax can flip on near-ties). A serving
+tier that promises its clients at-most-once token streams needs more:
+**exactly-once event delivery across a crash, with the continued output
+bitwise equal to the uninterrupted run**. This module provides that by
+pairing two artifacts:
+
+* **Full snapshots** (``Engine.snapshot(full=True)``, taken every
+  ``snapshot_every`` steps): the int4 pool bytes, block tables,
+  free-list and prefix-LRU order, the exact waiting/running split,
+  slots, prefill cursors, and each request's lifetime event count
+  (``Request.emitted``). A restore resumes the very next step
+  bit-identically — nothing re-prefills, so the fp-vs-int4 numerics
+  hazard never arises.
+* **A per-token event journal**: every event the engine emits is logged
+  under the key ``(request_id, lifetime ordinal)`` — the ordinal is the
+  request's ``emitted`` cursor, NOT ``len(generated)`` (which resets
+  when a preemption folds generated text back into the prompt, so two
+  different tokens could collide on the same key across incarnations).
+  Terminal events use the sentinel ordinal -1 (exactly one per request,
+  so the key is naturally unique).
+
+Recovery replays the gap between the last snapshot and the crash: the
+restored engine re-runs those steps, and every event it re-emits that is
+already journaled is (a) **verified bitwise** against the journal — a
+token mismatch raises :class:`ReplayMismatch`, the CI greedy-identical
+assert — and (b) **suppressed** from delivery (``step()`` returns only
+fresh events), so a downstream consumer sees each token exactly once
+across the crash.
+
+Two modes: in-memory (tests hand ``RecoveryLog.resume`` the old log's
+``snapshot_blob``/``journal``) and directory-backed (``dir=`` writes
+``snapshot.json`` atomically + appends ``journal.jsonl`` per step;
+``RecoveryLog.open_dir`` rebuilds after a real process kill).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+__all__ = ["RecoveryLog", "ReplayMismatch"]
+
+_TERMINAL = -1      # journal ordinal sentinel for a terminal event
+
+
+class ReplayMismatch(RuntimeError):
+    """A replayed event disagreed with the journal — the restored engine
+    is NOT continuing the crashed run's output."""
+
+
+class RecoveryLog:
+    """Rides along with an :class:`~repro.serving.engine.Engine`: drive
+    steps through :meth:`step` (instead of ``engine.step()`` +
+    ``engine.events()``) and the log journals every event, checkpoints a
+    full snapshot every ``snapshot_every`` steps, and — after a resume —
+    verifies and deduplicates the replayed gap.
+
+    ``journal`` entries: ``{"rid", "ord", "token", "state", "stop"}``
+    (``ord`` = lifetime token ordinal, -1 for the terminal event).
+    """
+
+    def __init__(self, engine, snapshot_every: int = 8,
+                 dir: Optional[str] = None, _journal=None,
+                 _snapshot: Optional[str] = None):
+        if snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1")
+        self.engine = engine
+        self.snapshot_every = snapshot_every
+        self.dir = dir
+        self.journal: list[dict] = list(_journal or [])
+        self._by_key = {(e["rid"], e["ord"]): e for e in self.journal}
+        # per-request delivery cursor: the next token event's lifetime
+        # ordinal. Seeded from the (restored) requests' emitted counts
+        # so replayed tokens key to the SAME ordinals the crashed run
+        # journaled them under.
+        self._cursor = {rid: r.emitted for rid, r in engine._by_id.items()}
+        self.replayed = 0           # journaled events re-emitted + verified
+        self.steps_logged = 0
+        self._snapshot = _snapshot if _snapshot is not None \
+            else engine.snapshot(full=True)
+        self._snapshot_step = engine.steps
+        if self.dir is not None:
+            os.makedirs(self.dir, exist_ok=True)
+            self._write_snapshot()
+
+    # --------------------------------------------------------------- logging
+
+    @property
+    def snapshot_blob(self) -> str:
+        """The latest checkpointed full snapshot (NOT live state)."""
+        return self._snapshot
+
+    def checkpoint(self):
+        """Take a full snapshot now (normally automatic via
+        ``snapshot_every``)."""
+        self._snapshot = self.engine.snapshot(full=True)
+        self._snapshot_step = self.engine.steps
+        if self.dir is not None:
+            self._write_snapshot()
+
+    def step(self):
+        """One engine step → the step's FRESH events (replayed
+        duplicates verified against the journal and suppressed)."""
+        self.engine.step()
+        fresh = []
+        new_entries = []
+        for ev in self.engine.events():
+            if ev.token is not None:
+                ordn = self._cursor.get(ev.request_id, 0)
+                self._cursor[ev.request_id] = ordn + 1
+            else:
+                ordn = _TERMINAL
+            entry = {"rid": ev.request_id, "ord": ordn,
+                     "token": ev.token, "state": ev.state.value,
+                     "stop": ev.stop_reason}
+            prior = self._by_key.get((ev.request_id, ordn))
+            if prior is not None:
+                # the crashed run already delivered this event: verify
+                # the replay is bitwise identical, deliver nothing
+                if prior["token"] != entry["token"]:
+                    raise ReplayMismatch(
+                        f"request {ev.request_id} token ordinal {ordn}: "
+                        f"replay produced {entry['token']}, journal has "
+                        f"{prior['token']} — continuation is not "
+                        "bit-identical")
+                self.replayed += 1
+                continue
+            self.journal.append(entry)
+            self._by_key[(ev.request_id, ordn)] = entry
+            new_entries.append(entry)
+            fresh.append(ev)
+        if self.dir is not None and new_entries:
+            with open(os.path.join(self.dir, "journal.jsonl"), "a") as f:
+                for e in new_entries:
+                    f.write(json.dumps(e) + "\n")
+        self.steps_logged += 1
+        if self.engine.steps % self.snapshot_every == 0:
+            self.checkpoint()
+        return fresh
+
+    def run(self, max_steps: int = 10_000):
+        """Drive steps until the engine drains; → all fresh events."""
+        out = []
+        while self.engine.sched.has_work and max_steps > 0:
+            out.extend(self.step())
+            max_steps -= 1
+        return out
+
+    def tokens_for(self, rid: int) -> list[int]:
+        """The journaled token stream for one request, in order."""
+        return [e["token"] for e in self.journal
+                if e["rid"] == rid and e["ord"] != _TERMINAL]
+
+    def terminal_for(self, rid: int) -> Optional[dict]:
+        return self._by_key.get((rid, _TERMINAL))
+
+    # -------------------------------------------------------------- recovery
+
+    @classmethod
+    def resume(cls, snapshot_blob: str, journal: list, cfg, qparams,
+               quant, ecfg, snapshot_every: int = 8,
+               dir: Optional[str] = None, **engine_kw) -> "RecoveryLog":
+        """Rebuild after a crash: restore the engine from the last full
+        snapshot and seed the log with the crashed run's journal. Steps
+        between the snapshot and the crash re-run — their events are
+        verified against the journal and NOT redelivered."""
+        from repro.serving.engine import Engine
+        eng = Engine.restore(snapshot_blob, cfg, qparams, quant, ecfg,
+                             **engine_kw)
+        return cls(eng, snapshot_every=snapshot_every, dir=dir,
+                   _journal=journal, _snapshot=snapshot_blob)
+
+    @classmethod
+    def open_dir(cls, dir: str, cfg, qparams, quant, ecfg,
+                 snapshot_every: int = 8, **engine_kw) -> "RecoveryLog":
+        """Resume from a directory-backed log after a process kill."""
+        with open(os.path.join(dir, "snapshot.json")) as f:
+            snapshot_blob = f.read()
+        journal = []
+        jpath = os.path.join(dir, "journal.jsonl")
+        if os.path.exists(jpath):
+            with open(jpath) as f:
+                journal = [json.loads(line) for line in f if line.strip()]
+        return cls.resume(snapshot_blob, journal, cfg, qparams, quant,
+                          ecfg, snapshot_every=snapshot_every, dir=dir,
+                          **engine_kw)
+
+    def _write_snapshot(self):
+        # atomic: a kill mid-write must not corrupt the last good
+        # snapshot (rename is atomic on POSIX)
+        tmp = os.path.join(self.dir, "snapshot.json.tmp")
+        with open(tmp, "w") as f:
+            f.write(self._snapshot)
+        os.replace(tmp, os.path.join(self.dir, "snapshot.json"))

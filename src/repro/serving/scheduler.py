@@ -23,12 +23,30 @@ batch is formed. Policy (vLLM-style):
   mid-prefill — a preempted request simply restarts at ``prefill_pos=0``;
 * decode batch = all running sequences (up to ``max_batch``);
 * on pool exhaustion the *youngest* running sequence is preempted back to
-  the waiting queue (its pages freed — recomputed on re-admission);
+  the waiting queue (its pages freed — recomputed on re-admission).
+  Preemption is the LAST resort: the allocator drains the reclaimable
+  prefix LRU first (``PagedKV4Cache._acquire_page``), so cached-but-idle
+  prefix pages are always shed before any in-flight work is;
+* graceful degradation under pressure (``max_waiting``): the waiting
+  queue is bounded — the engine rejects at submit when it is full
+  (``FAILED("queue_full")``), and a preemption victim that cannot be
+  re-queued without overflowing the bound is *shed* instead
+  (``FAILED("shed")``) — bounded queues turn overload into explicit,
+  counted outcomes instead of unbounded latency;
+* per-request deadlines (``SamplingParams.deadline_ms`` / ``ttft_ms``)
+  are enforced at every step boundary by ``expire_deadlines``: expired
+  requests — waiting or running — move to ``TIMED_OUT`` with partial
+  output retained and pages freed refcount-exactly;
+* step-level failures quarantine via ``fail`` — same page accounting as
+  ``abort``, state ``FAILED`` with the error in ``stop_reason``;
 * ``snapshot``/``restore`` serialize scheduler state so an engine restart
-  (node failure) resumes with pending work intact — generated text is
-  reproducible because sampling is keyed by (request_id, position).
-  Mid-prefill progress is device KV (lost with the node), so pending
-  requests restore at ``prefill_pos=0`` with generated text folded in.
+  (node failure) resumes with pending work intact. The legacy mode
+  (``full=False``) demotes running requests to waiting (their device KV
+  is lost with the node) and folds generated text into the prompt; the
+  ``full=True`` mode keeps the exact waiting/running split, slots,
+  prefill positions, and the free-slot order — paired with the KV-pool
+  snapshot in ``PagedKV4Cache.snapshot_state`` it supports bitwise
+  replay of the remaining work (``serving/recovery.py``).
 """
 
 from __future__ import annotations
@@ -57,10 +75,31 @@ class Request:
     params: Optional[SamplingParams] = None   # None → engine defaults
     state: RequestState = RequestState.QUEUED
     cached_tokens: int = 0         # prefix-cache hit tokens, last admission
+    emitted: int = 0               # lifetime token events (survives the
+    #                                preemption fold — the journal's
+    #                                per-request delivery cursor)
+    terminal_emitted: bool = dataclasses.field(   # exactly-one-terminal
+        default=False, repr=False, compare=False)
     events: list = dataclasses.field(          # RequestOutput stream log
         default_factory=list, repr=False, compare=False)
     on_event: Optional[Callable] = dataclasses.field(
         default=None, repr=False, compare=False)
+
+    def deadline_status(self, now: float) -> Optional[str]:
+        """The stop_reason this request owes at wall-clock ``now``
+        (``"deadline"`` / ``"ttft_budget"``), or ``None`` if within
+        budget. Measured from ``arrived_at``; preemption keeps the
+        arrival stamp, so a deadline survives re-queueing."""
+        p = self.params
+        if p is None:
+            return None
+        waited_ms = (now - self.arrived_at) * 1000.0
+        if p.deadline_ms is not None and waited_ms > p.deadline_ms:
+            return "deadline"
+        if (p.ttft_ms is not None and not self.first_token_at
+                and waited_ms > p.ttft_ms):
+            return "ttft_budget"
+        return None
 
     @property
     def prefilled(self) -> bool:
@@ -81,15 +120,25 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, max_batch: int, max_seqs: int):
+    def __init__(self, max_batch: int, max_seqs: int,
+                 max_waiting: Optional[int] = None):
         self.max_batch = max_batch
         self.max_seqs = max_seqs
+        self.max_waiting = max_waiting   # None = unbounded waiting queue
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
         self.finished: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
         self.preemptions = 0
+        self.released_count = 0     # terminal requests dropped via release
         self._plan_cursor = 0       # round-robin start for prefill plans
+
+    @property
+    def waiting_full(self) -> bool:
+        """True when the bounded waiting queue cannot take another
+        request — the engine's reject-at-submit backpressure signal."""
+        return (self.max_waiting is not None
+                and len(self.waiting) >= self.max_waiting)
 
     # ----------------------------------------------------------------- queue
 
@@ -214,6 +263,16 @@ class Scheduler:
         cache.free_seq(req.seq_slot)
         self._free_slots.append(req.seq_slot)
         req.seq_slot = -1
+        self.preemptions += 1
+        if self.waiting_full:
+            # load shed: re-queueing would overflow the bounded waiting
+            # queue, so the victim is dropped terminally instead of
+            # churning — pages are already freed, partial output kept.
+            # The caller (engine) counts shed_count + emits the event.
+            req.stop_reason = "shed"
+            req.state = RequestState.FAILED
+            self.finished.append(req)
+            return req
         # keep generated text: re-admission prefills prompt+generated.
         # Mid-prefill victims (generated == []) simply restart at 0.
         req.prompt = req.prompt + req.generated
@@ -222,7 +281,6 @@ class Scheduler:
         req.prefill_pos = 0
         req.state = RequestState.QUEUED
         self.waiting.appendleft(req)
-        self.preemptions += 1
         return req
 
     def complete(self, req: Request, cache):
@@ -233,13 +291,10 @@ class Scheduler:
         req.state = RequestState.FINISHED
         self.finished.append(req)
 
-    def abort(self, req: Request, cache) -> bool:
-        """Cancel ``req`` wherever it is in the lifecycle. Running
-        sequences (mid-prefill or mid-decode) drop their page references
-        refcount-exactly; queued requests just leave the queue. Returns
-        False if the request already reached a terminal state."""
-        if req.state.terminal:
-            return False
+    def _drop(self, req: Request, cache):
+        """Detach ``req`` from wherever it lives (running: free pages
+        refcount-exactly + return the slot; waiting: leave the queue).
+        The shared teardown under abort / fail / timeout."""
         if req in self.running:
             self.running.remove(req)
             cache.free_seq(req.seq_slot)
@@ -247,19 +302,72 @@ class Scheduler:
             req.seq_slot = -1
         elif req in self.waiting:
             self.waiting.remove(req)
+
+    def abort(self, req: Request, cache) -> bool:
+        """Cancel ``req`` wherever it is in the lifecycle. Running
+        sequences (mid-prefill or mid-decode) drop their page references
+        refcount-exactly; queued requests just leave the queue. Returns
+        False if the request already reached a terminal state."""
+        if req.state.terminal:
+            return False
+        self._drop(req, cache)
         req.stop_reason = "aborted"
         req.state = RequestState.ABORTED
         self.finished.append(req)
         return True
 
-    def release(self, req: Request):
+    def fail(self, req: Request, cache, reason: str) -> bool:
+        """Quarantine ``req`` after a step-level failure: same exact
+        page accounting as :meth:`abort`, terminal state ``FAILED`` with
+        the error in ``stop_reason``. Partial output is retained (the
+        tokens already streamed are real). Returns False if already
+        terminal (a request cannot fail twice)."""
+        if req.state.terminal:
+            return False
+        self._drop(req, cache)
+        req.stop_reason = reason
+        req.state = RequestState.FAILED
+        self.finished.append(req)
+        return True
+
+    def reject(self, req: Request, reason: str = "queue_full"):
+        """Refuse a request at submit (bounded-queue backpressure): it
+        never enters the waiting queue — straight to ``FAILED`` with a
+        policy reason, holding no pages or slots."""
+        req.stop_reason = reason
+        req.state = RequestState.FAILED
+        self.finished.append(req)
+
+    def expire_deadlines(self, cache, now: float) -> list[Request]:
+        """Expire every waiting/running request past its deadline or
+        TTFT budget to ``TIMED_OUT`` — pages freed refcount-exactly,
+        partial output retained. Runs at each step boundary BEFORE
+        admission, so a dead-on-arrival request never acquires pages.
+        Returns the expired requests (the engine emits their terminal
+        events and counts ``timeout_count``)."""
+        expired = []
+        for req in list(self.running) + list(self.waiting):
+            why = req.deadline_status(now)
+            if why is None:
+                continue
+            self._drop(req, cache)
+            req.stop_reason = why
+            req.state = RequestState.TIMED_OUT
+            self.finished.append(req)
+            expired.append(req)
+        return expired
+
+    def release(self, req: Request) -> bool:
         """Forget a terminal request (bounded retention): drop it from
         ``finished`` so scheduler state scales with in-flight work, not
-        lifetime traffic. No-op if the request was already released."""
-        try:
-            self.finished.remove(req)
-        except ValueError:
-            pass
+        lifetime traffic. Double-release is explicit, not silent: a
+        request no longer in ``finished`` returns False and does not
+        bump ``released_count``."""
+        if req not in self.finished:
+            return False
+        self.finished.remove(req)
+        self.released_count += 1
+        return True
 
     @property
     def has_work(self) -> bool:
@@ -267,9 +375,71 @@ class Scheduler:
 
     # ------------------------------------------------------- fault tolerance
 
-    def snapshot(self) -> str:
-        """Serialize pending work (running seqs are demoted to waiting —
-        their device KV is lost on failure and recomputed on restore)."""
+    @staticmethod
+    def _req_entry(r: Request) -> dict:
+        """Full-fidelity request record for the ``full=True`` snapshot:
+        nothing folded, nothing demoted — enough to resume the exact
+        incarnation (slot, prefill cursor, state, lifetime event count)."""
+        entry = {
+            "request_id": r.request_id,
+            "prompt": list(r.prompt),
+            "generated": list(r.generated),
+            "max_new_tokens": r.max_new_tokens,
+            "arrived_at": r.arrived_at,
+            "first_token_at": r.first_token_at,
+            "cached_tokens": r.cached_tokens,
+            "emitted": r.emitted,
+            "seq_slot": r.seq_slot,
+            "prefill_pos": r.prefill_pos,
+            "state": r.state.value,
+            "stop_reason": r.stop_reason,
+        }
+        if r.params is not None:
+            entry["params"] = dataclasses.asdict(r.params)
+        return entry
+
+    @staticmethod
+    def _req_from_entry(e: dict) -> Request:
+        params = e.get("params")
+        req = Request(
+            request_id=e["request_id"], prompt=list(e["prompt"]),
+            max_new_tokens=e["max_new_tokens"],
+            arrived_at=e.get("arrived_at", 0.0),
+            first_token_at=e.get("first_token_at", 0.0),
+            cached_tokens=e.get("cached_tokens", 0),
+            emitted=e.get("emitted", 0),
+            params=SamplingParams(**params) if params else None)
+        req.generated = list(e.get("generated", []))
+        req.seq_slot = e.get("seq_slot", -1)
+        req.prefill_pos = e.get("prefill_pos", 0)
+        req.state = RequestState(e.get("state", "queued"))
+        req.stop_reason = e.get("stop_reason")
+        req.terminal_emitted = req.state.terminal
+        return req
+
+    def snapshot(self, full: bool = False) -> str:
+        """Serialize scheduler state.
+
+        Legacy mode (default): running sequences are demoted to waiting
+        — their device KV is lost with the node and is recomputed on
+        restore — with generated text folded into the prompt.
+
+        ``full=True``: the journaled-recovery mode. The exact
+        waiting/running split, slot assignments, prefill cursors,
+        free-slot order, and plan cursor are all captured, so a restore
+        paired with :meth:`PagedKV4Cache.restore_state` resumes the
+        very next step bit-identically (nothing re-prefills)."""
+        if full:
+            return json.dumps({
+                "format": "full",
+                "waiting": [self._req_entry(r) for r in self.waiting],
+                "running": [self._req_entry(r) for r in self.running],
+                "finished": [self._req_entry(r) for r in self.finished],
+                "free_slots": list(self._free_slots),
+                "plan_cursor": self._plan_cursor,
+                "preemptions": self.preemptions,
+                "released_count": self.released_count,
+            })
         reqs = []
         for r in list(self.waiting) + self.running:
             entry = {
@@ -284,6 +454,7 @@ class Scheduler:
                 # prefix-hit counters honest across the crash
                 "first_token_at": r.first_token_at,
                 "cached_tokens": r.cached_tokens,
+                "emitted": r.emitted,
             }
             if r.params is not None:
                 entry["params"] = dataclasses.asdict(r.params)
@@ -297,13 +468,27 @@ class Scheduler:
             "arrived_at": r.arrived_at,
             "first_token_at": r.first_token_at,
             "cached_tokens": r.cached_tokens,
+            "emitted": r.emitted,
         } for r in self.finished]
         return json.dumps({"pending": reqs, "finished": done})
 
     @classmethod
-    def restore(cls, blob: str, max_batch: int, max_seqs: int) -> "Scheduler":
+    def restore(cls, blob: str, max_batch: int, max_seqs: int,
+                max_waiting: Optional[int] = None) -> "Scheduler":
         state = json.loads(blob)
-        sched = cls(max_batch, max_seqs)
+        sched = cls(max_batch, max_seqs, max_waiting)
+        if state.get("format") == "full":
+            for e in state["waiting"]:
+                sched.waiting.append(cls._req_from_entry(e))
+            for e in state["running"]:
+                sched.running.append(cls._req_from_entry(e))
+            for e in state["finished"]:
+                sched.finished.append(cls._req_from_entry(e))
+            sched._free_slots = list(state["free_slots"])
+            sched._plan_cursor = state.get("plan_cursor", 0)
+            sched.preemptions = state.get("preemptions", 0)
+            sched.released_count = state.get("released_count", 0)
+            return sched
         for r in state["pending"]:
             params = r.get("params")
             sched.submit(Request(
@@ -312,6 +497,7 @@ class Scheduler:
                 arrived_at=r["arrived_at"],
                 first_token_at=r.get("first_token_at", 0.0),
                 cached_tokens=r.get("cached_tokens", 0),
+                emitted=r.get("emitted", 0),
                 params=SamplingParams(**params) if params else None))
         for r in state["finished"]:
             req = Request(request_id=r["request_id"], prompt=r["prompt"],
@@ -322,5 +508,7 @@ class Scheduler:
             req.state = RequestState(r.get("state", "finished"))
             req.first_token_at = r.get("first_token_at", 0.0)
             req.cached_tokens = r.get("cached_tokens", 0)
+            req.emitted = r.get("emitted", 0)
+            req.terminal_emitted = req.state.terminal
             sched.finished.append(req)
         return sched

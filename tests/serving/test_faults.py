@@ -1,0 +1,414 @@
+"""Chaos suite for the fault-tolerant serving core.
+
+Seeded fault schedules (``FaultInjector.random_schedule``) drive the
+engine through injected allocator exhaustion, forward failures, NaN
+logits, sampler blow-ups, KV-append failures, and throwing callbacks,
+and the suite pins the serving invariants that must hold under ALL of
+them:
+
+* ``step()`` never raises (and on the unified path every injected fault
+  is absorbed by its dedicated guard — ``internal_errors`` stays 0);
+* the paged pool returns to baseline after the workload drains
+  (refcount-exact quarantine: ``pages_free == num_pages``, all
+  refcounts 0);
+* every request reaches exactly ONE terminal event, it is the LAST
+  event, and no token event ever follows it;
+* the token-event stream equals the request's lifetime emitted count.
+
+Named schedules then exercise each fault point's specific isolation
+contract (batch-granular vs row-granular quarantine, exhaustion as a
+condition, callback detach), deadlines/TTFT run against an injectable
+fake clock, and the bounded waiting queue's reject/shed paths are
+driven end-to-end.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.api import RequestState, SamplingParams
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.faults import (FAULT_POINTS, Fault, FaultInjector,
+                                  InjectedFault)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, faults=None, clock=None, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(max_batch=4, num_pages=64, page_size=8,
+                    max_pages_per_seq=16, prefill_chunk_tokens=24,
+                    kv_range=4.0)
+    defaults.update(kw)
+    ekw = {}
+    if faults is not None:
+        ekw["faults"] = faults
+    if clock is not None:
+        ekw["clock"] = clock
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults), **ekw)
+
+
+class FakeClock:
+    """Injectable wall clock: deadline tests advance time explicitly.
+    Starts at 1.0, not 0.0 — the engine uses ``first_token_at == 0.0``
+    as its "no first token yet" sentinel (harmless under real
+    ``time.time()``, which is never 0)."""
+
+    def __init__(self, t: float = 1.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def assert_serving_invariants(eng, num_pages=64):
+    """The invariants every chaos run must uphold, whatever was injected."""
+    assert not eng.sched.has_work                    # workload drained
+    assert eng.cache.pages_free == num_pages         # pool back to baseline
+    assert (eng.cache.ref == 0).all()
+    assert not eng.cache.active
+    for req in eng._by_id.values():
+        assert req.state.terminal, \
+            f"request {req.request_id} ended non-terminal: {req.state}"
+        terminals = [e for e in req.events if e.finished]
+        assert len(terminals) == 1, \
+            f"request {req.request_id}: {len(terminals)} terminal events"
+        assert req.events[-1].finished, \
+            f"request {req.request_id}: events after the terminal event"
+        tokens = [e for e in req.events if e.token is not None]
+        assert all(not e.finished for e in tokens)
+        assert len(tokens) == req.emitted
+
+
+# ------------------------------------------------------------- chaos sweep
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_chaos_seeded_schedules(setup, seed):
+    """20 seeded random fault mixes: whatever fires, step() never
+    raises, pages return to baseline, and the event contract holds."""
+    cfg = setup[0]
+    fi = FaultInjector.random_schedule(seed)
+    eng = make_engine(setup, faults=fi)
+    rng = np.random.default_rng(seed)
+    sink = []
+    for i in range(4):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              int(rng.integers(5, 15))).tolist()
+        eng.submit(prompt,
+                   SamplingParams(
+                       max_new_tokens=int(rng.integers(3, 7)),
+                       temperature=0.7 if i == 1 else 0.0, top_k=8),
+                   # a callback on one request arms the emit_event point
+                   on_event=sink.append if i == 0 else None)
+    eng.run(max_steps=300)      # step() raising would propagate here
+    assert_serving_invariants(eng)
+    # every injected fault has a dedicated guard on the unified path —
+    # nothing should fall through to the last-resort backstop
+    assert eng.internal_errors == 0, eng.last_error
+    # the schedule is deterministic: what fired is replayable from the
+    # seed, and anything that fired was absorbed (asserts above held)
+    assert all(p in FAULT_POINTS for p, _, _ in fi.fired)
+
+
+# ------------------------------------------------- per-point named schedules
+
+
+def test_forward_raise_quarantines_batch(setup):
+    """An exception inside the forward fails every request in THAT
+    step's batch — refcount-exact page release, step() returns."""
+    fi = FaultInjector([Fault("forward", step=2, action="raise")])
+    eng = make_engine(setup, faults=fi)
+    hs = [eng.submit([3 + i, 5, 7, 11, 13], SamplingParams(max_new_tokens=6))
+          for i in range(3)]
+    eng.run(max_steps=100)
+    states = [eng.result(h).state for h in hs]
+    assert all(s == RequestState.FAILED for s in states)
+    assert all(eng.result(h).stop_reason.startswith("forward:")
+               for h in hs)
+    assert eng.failed_count == 3
+    assert fi.fired == [("forward", "raise", 2)]
+    assert_serving_invariants(eng)
+    assert eng.internal_errors == 0
+
+
+def test_forward_nan_isolates_single_row(setup):
+    """NaN logits on one row quarantine exactly that request — the rest
+    of the batch keeps decoding to a clean finish."""
+    fi = FaultInjector([Fault("forward", step=3, action="nan", row=1)])
+    eng = make_engine(setup, faults=fi)
+    hs = [eng.submit([3 + i, 5, 7, 11, 13], SamplingParams(max_new_tokens=6))
+          for i in range(3)]
+    eng.run(max_steps=100)
+    by_state: dict = {}
+    for h in hs:
+        by_state.setdefault(eng.result(h).state, []).append(eng.result(h))
+    assert len(by_state[RequestState.FAILED]) == 1
+    assert by_state[RequestState.FAILED][0].stop_reason == \
+        "non_finite_logits"
+    assert len(by_state[RequestState.FINISHED]) == 2
+    for r in by_state[RequestState.FINISHED]:
+        assert len(r.generated) == 6        # survivors run to completion
+    assert eng.failed_count == 1
+    assert_serving_invariants(eng)
+    assert eng.internal_errors == 0
+
+
+def test_sample_fault_fails_only_sampled_rows(setup):
+    """A sampler exception fails exactly the rows being sampled; a
+    request still mid-prefill at that step is untouched."""
+    fi = FaultInjector([Fault("sample", nth=2)])
+    eng = make_engine(setup, faults=fi)
+    ha = eng.submit([2, 3, 5, 7, 11, 13], SamplingParams(max_new_tokens=6))
+    # 60-token prompt: prefill spans 3+ chunks of <=24 tokens, so this
+    # request is still mid-prefill — NOT in the sampled set — when the
+    # 2nd sampler call blows up on ha's decode row
+    hb = eng.submit(list(range(2, 62)), SamplingParams(max_new_tokens=4))
+    eng.run(max_steps=100)
+    assert eng.result(ha).state == RequestState.FAILED
+    assert eng.result(ha).stop_reason.startswith("sample:")
+    assert eng.result(hb).state == RequestState.FINISHED
+    assert len(eng.result(hb).generated) == 4
+    assert eng.failed_count == 1
+    assert_serving_invariants(eng)
+    assert eng.internal_errors == 0
+
+
+def test_append_kv_fault_quarantines_batch(setup):
+    """A KV write-destination failure aborts the step's forward before
+    any pool write — the batch quarantines, pages to baseline."""
+    fi = FaultInjector([Fault("append_kv", nth=3)])
+    eng = make_engine(setup, faults=fi)
+    hs = [eng.submit([3 + i, 5, 7, 11], SamplingParams(max_new_tokens=5))
+          for i in range(2)]
+    eng.run(max_steps=100)
+    for h in hs:
+        assert eng.result(h).state == RequestState.FAILED
+        assert "append_kv" in eng.result(h).stop_reason
+    assert fi.fired[0][0] == "append_kv"
+    assert_serving_invariants(eng)
+    assert eng.internal_errors == 0
+
+
+def test_alloc_exhaust_degrades_without_corruption(setup):
+    """Allocator exhaustion is a CONDITION, not an exception: the first
+    page acquisition coming up dry just defers admission one step — the
+    request still finishes cleanly, nothing fails."""
+    fi = FaultInjector([Fault("alloc_page", nth=1)])
+    eng = make_engine(setup, faults=fi)
+    h = eng.submit([2, 3, 5, 7], SamplingParams(max_new_tokens=4))
+    eng.run(max_steps=100)
+    assert fi.fired[0][0] == "alloc_page"
+    assert eng.result(h).state == RequestState.FINISHED
+    assert len(eng.result(h).generated) == 4
+    assert eng.failed_count == 0
+    assert_serving_invariants(eng)
+    assert eng.internal_errors == 0
+
+
+def test_emit_event_fault_detaches_callback(setup):
+    """A throwing on_event callback is detached and counted — the
+    request itself survives to a clean finish with its event log
+    intact; only the push deliveries after the throw are lost."""
+    fi = FaultInjector([Fault("emit_event", nth=2)])
+    eng = make_engine(setup, faults=fi)
+    received = []
+    h = eng.submit([2, 3, 5, 7], SamplingParams(max_new_tokens=4),
+                   on_event=received.append)
+    eng.run(max_steps=100)
+    req = eng.result(h)
+    assert req.state == RequestState.FINISHED
+    assert len(req.generated) == 4
+    assert eng.callback_errors == 1
+    assert req.on_event is None                 # detached, not retried
+    assert len(received) == 1                   # only the pre-fault delivery
+    assert len([e for e in req.events if e.token is not None]) == 4
+    assert_serving_invariants(eng)
+
+
+# --------------------------------------------------------- deadlines / TTFT
+
+
+def test_deadline_expires_mid_decode_with_partial_output(setup):
+    """A running request past deadline_ms lands in TIMED_OUT at the next
+    step boundary — partial output retained, pages freed exactly;
+    deadline-free requests are untouched."""
+    clock = FakeClock()
+    eng = make_engine(setup, clock=clock)
+    ha = eng.submit([2, 3, 5, 7], SamplingParams(max_new_tokens=10,
+                                                 deadline_ms=50.0))
+    hb = eng.submit([11, 13, 17], SamplingParams(max_new_tokens=4))
+    for _ in range(3):
+        eng.step()          # both decode a few tokens at t=0
+    got = len(eng.result(ha).generated)
+    assert got >= 1
+    clock.t = 1.051         # 51ms > the 50ms deadline
+    eng.run(max_steps=100)
+    ra = eng.result(ha)
+    assert ra.state == RequestState.TIMED_OUT
+    assert ra.stop_reason == "deadline"
+    assert len(ra.generated) == got             # partial output retained
+    assert eng.result(hb).state == RequestState.FINISHED
+    assert eng.timeout_count == 1
+    assert_serving_invariants(eng)
+
+
+def test_ttft_budget_expires_before_first_token_only(setup):
+    """ttft_ms guards the FIRST token: a tokenless request past it times
+    out with "ttft_budget"; one that already produced a token is immune
+    to the TTFT budget (only deadline_ms can expire it)."""
+    clock = FakeClock()
+    eng = make_engine(setup, clock=clock)
+    hb = eng.submit([11, 13, 17], SamplingParams(max_new_tokens=4,
+                                                 ttft_ms=50.0))
+    for _ in range(2):
+        eng.step()          # hb gets its first token at t=1.0
+    assert len(eng.result(hb).generated) >= 1
+    ha = eng.submit([2, 3, 5, 7], SamplingParams(max_new_tokens=4,
+                                                 ttft_ms=50.0))
+    clock.t = 1.051         # past ha's TTFT budget before it ever steps
+    eng.run(max_steps=100)
+    assert eng.result(ha).state == RequestState.TIMED_OUT
+    assert eng.result(ha).stop_reason == "ttft_budget"
+    assert eng.result(ha).generated == []
+    assert eng.result(hb).state == RequestState.FINISHED   # immune: has TTFT
+    assert_serving_invariants(eng)
+
+
+def test_dead_on_arrival_never_acquires_pages(setup):
+    """Expiry runs BEFORE admission: a request already past its deadline
+    when the step starts is torn down without ever touching the pool."""
+    clock = FakeClock()
+    eng = make_engine(setup, clock=clock)
+    h = eng.submit([2, 3, 5, 7], SamplingParams(max_new_tokens=4,
+                                                deadline_ms=1.0))
+    clock.t = 2.0           # 1000ms >> the 1ms deadline: dead on arrival
+    eng.step()
+    assert eng.result(h).state == RequestState.TIMED_OUT
+    assert eng.cache.pages_free == 64      # never held a page
+    assert eng.steps == 1
+    assert_serving_invariants(eng)
+
+
+# ------------------------------------------------- backpressure: reject/shed
+
+
+def test_submit_rejects_when_waiting_queue_full(setup):
+    """Bounded waiting queue: a submit against a full queue comes back
+    already terminal — FAILED("queue_full"), no pages or slots held."""
+    eng = make_engine(setup, max_waiting=1)
+    h0 = eng.submit([2, 3, 5], SamplingParams(max_new_tokens=3))
+    h1 = eng.submit([7, 11, 13], SamplingParams(max_new_tokens=3))
+    r1 = eng.result(h1)
+    assert r1.state == RequestState.FAILED       # rejected at submit
+    assert r1.stop_reason == "queue_full"
+    assert r1.events[-1].finished                # terminal event emitted
+    assert eng.rejected_count == 1
+    eng.run(max_steps=100)
+    assert eng.result(h0).state == RequestState.FINISHED
+    assert_serving_invariants(eng)
+
+
+def test_preemption_sheds_victim_when_queue_full(setup):
+    """Under pool pressure with the waiting queue full, the preemption
+    victim is SHED (FAILED "shed") instead of re-queued — overload
+    becomes an explicit, counted outcome, and the survivors finish."""
+    # 4-page pool, 2 running seqs: both outgrow their two pages at the
+    # 16-token boundary, the extend fails, and the youngest is preempted
+    # — with the queue held full by a third request, the victim is shed.
+    # Submits interleave with steps: against a max_waiting=1 queue, two
+    # back-to-back submits before any admission would just reject the
+    # second at the door
+    eng = make_engine(setup, max_batch=2, num_pages=4, page_size=8,
+                      max_pages_per_seq=4, max_waiting=1)
+    rng = np.random.default_rng(11)
+    ha = eng.submit(rng.integers(1, 100, 8).tolist(),
+                    SamplingParams(max_new_tokens=12))
+    eng.step()                                   # admit ha
+    hb = eng.submit(rng.integers(1, 100, 8).tolist(),
+                    SamplingParams(max_new_tokens=12))
+    eng.step()                                   # admit hb
+    hc = eng.submit(rng.integers(1, 100, 8).tolist(),
+                    SamplingParams(max_new_tokens=2))
+    assert eng.sched.waiting_full                # hc holds the only slot
+    eng.run(max_steps=300)
+    assert eng.shed_count >= 1
+    shed = [r for r in (eng.result(h) for h in (ha, hb, hc))
+            if r.stop_reason == "shed"]
+    assert shed and all(r.state == RequestState.FAILED for r in shed)
+    survivors = [r for r in (eng.result(h) for h in (ha, hb, hc))
+                 if r.stop_reason != "shed"]
+    assert all(r.state == RequestState.FINISHED for r in survivors)
+    assert_serving_invariants(eng, num_pages=4)
+
+
+# ------------------------------------------------------ schedule validation
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        Fault("warp_core", nth=1)
+    with pytest.raises(ValueError, match="exactly one trigger"):
+        Fault("forward")                       # neither nth nor step
+    with pytest.raises(ValueError, match="exactly one trigger"):
+        Fault("forward", nth=1, step=2)        # both
+    with pytest.raises(ValueError, match="not valid for point"):
+        Fault("alloc_page", nth=1, action="raise")
+    with pytest.raises(ValueError, match="not valid for point"):
+        Fault("sample", nth=1, action="nan")
+    # defaults: action falls back to the point's canonical failure mode
+    assert Fault("alloc_page", nth=1).action == "exhaust"
+    assert Fault("forward", step=1).action == "raise"
+
+
+def test_from_spec_parses_cli_grammar():
+    fi = FaultInjector.from_spec(
+        "forward:step=3,action=nan,row=2; alloc_page:nth=20; sample:nth=2")
+    assert [f.point for f in fi.faults] == ["forward", "alloc_page",
+                                            "sample"]
+    f0 = fi.faults[0]
+    assert (f0.step, f0.action, f0.row) == (3, "nan", 2)
+    assert fi.faults[1].nth == 20 and fi.faults[1].action == "exhaust"
+    with pytest.raises(ValueError, match="unknown fault key"):
+        FaultInjector.from_spec("forward:when=3")
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultInjector.from_spec("bogus:nth=1")
+
+
+def test_random_schedule_is_deterministic():
+    a = FaultInjector.random_schedule(42)
+    b = FaultInjector.random_schedule(42)
+    assert a.describe() == b.describe()
+    assert a.describe() != FaultInjector.random_schedule(43).describe()
+
+
+def test_injector_fires_each_fault_once():
+    fi = FaultInjector([Fault("sample", nth=2),
+                        Fault("sample", nth=3)])
+    assert fi.check("sample") is None          # hit 1
+    assert fi.check("sample").nth == 2         # hit 2 fires
+    assert fi.check("sample").nth == 3         # hit 3 fires the other
+    assert fi.check("sample") is None          # both spent
+    assert fi.hits["sample"] == 4
+    assert [f for f in fi.pending] == []
+    assert [p for p, _, _ in fi.fired] == ["sample", "sample"]
+
+
+def test_step_triggered_fault_fires_on_step():
+    fi = FaultInjector([Fault("forward", step=3)])
+    fi.begin_step(2)
+    assert fi.check("forward") is None
+    fi.begin_step(3)
+    f = fi.check("forward")
+    assert f is not None and isinstance(InjectedFault("x"), RuntimeError)
+    fi.begin_step(3)
+    assert fi.check("forward") is None         # fire-once

@@ -1,0 +1,272 @@
+"""Journaled crash recovery: full snapshots resume bit-identically, the
+event journal redelivers exactly once, and a diverging replay is caught.
+
+The legacy scheduler snapshot (PR-4) survives a crash by re-prefilling —
+correct but not bitwise (fp re-prefill vs int4 decode numerics). The
+``full=True`` snapshot captures the int4 pool bytes and every allocator/
+scheduler cursor, so the restored engine's next step is the SAME step
+the crashed engine would have run: these tests pin
+
+* kill-and-restore greedy-identical continuation (the CI chaos-cpu
+  assert): tokens after the restore equal the uninterrupted run's,
+* exactly-once delivery across the crash: the union of events delivered
+  before the kill and after the resume is duplicate-free and complete,
+  with the replayed gap verified against the journal,
+* ``ReplayMismatch`` on a tampered journal (a resume that does NOT
+  continue the crashed run must refuse to pass for one that does),
+* directory-backed snapshots/journals surviving a real process-style
+  reload (``open_dir``), and
+* pool-shape validation on restore (a blob from a differently-sized
+  engine must be rejected, not silently mis-read).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.api import RequestState, SamplingParams
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.recovery import RecoveryLog, ReplayMismatch
+
+ECFG = dict(max_batch=4, num_pages=64, page_size=8, max_pages_per_seq=16,
+            prefill_chunk_tokens=24, kv_range=4.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(ECFG)
+    defaults.update(kw)
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults))
+
+
+def _prompts(n=2, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 100, int(rng.integers(10, 18))).tolist()
+            for _ in range(n)]
+
+
+def _submit_all(eng, prompts, max_new=8):
+    return [eng.submit(p, SamplingParams(max_new_tokens=max_new))
+            for p in prompts]
+
+
+def _reference(setup, prompts, max_new=8):
+    eng = make_engine(setup)
+    _submit_all(eng, prompts, max_new)
+    eng.run()
+    return {r.request_id: list(r.generated) for r in eng.sched.finished}
+
+
+# --------------------------------------------------------- full snapshots
+
+
+def test_full_snapshot_resumes_bitwise(setup):
+    """Kill mid-decode, restore from snapshot(full=True): the restored
+    engine's continuation is token-identical to the uninterrupted run —
+    nothing re-prefills, the int4 pages come back byte-exact."""
+    cfg, qc, qparams = setup
+    prompts = _prompts()
+    ref = _reference(setup, prompts)
+
+    eng = make_engine(setup)
+    _submit_all(eng, prompts)
+    for _ in range(4):
+        eng.step()                       # mid-flight: prompts resident,
+    blob = eng.snapshot(full=True)       # some tokens already out
+    mid = {r.request_id: len(r.generated) for r in eng.sched.running}
+    assert any(n > 0 for n in mid.values())      # genuinely mid-decode
+    assert any(n < 8 for n in mid.values())
+
+    eng2 = Engine.restore(blob, cfg, qparams, qc, EngineConfig(**ECFG))
+    assert eng2.steps == eng.steps               # counters survive
+    eng2.run()
+    got = {r.request_id: list(r.generated) for r in eng2.sched.finished}
+    assert got == ref
+    assert eng2.cache.pages_free == 64
+    # and the abandoned original still completes identically (snapshot
+    # is a pure copy, not a move)
+    eng.run()
+    assert {r.request_id: list(r.generated)
+            for r in eng.sched.finished} == ref
+
+
+def test_full_snapshot_preserves_split_and_cursors(setup):
+    """The full blob keeps the exact waiting/running split (nothing is
+    demoted), slots, prefill cursors, and the free-slot order."""
+    cfg, qc, qparams = setup
+    eng = make_engine(setup, max_batch=1)
+    prompts = _prompts(n=3, seed=9)
+    _submit_all(eng, prompts, max_new=4)
+    for _ in range(2):
+        eng.step()
+    assert len(eng.sched.running) == 1 and len(eng.sched.waiting) == 2
+    blob = eng.snapshot(full=True)
+
+    eng2 = Engine.restore(blob, cfg, qparams, qc,
+                          EngineConfig(**dict(ECFG, max_batch=1)))
+    assert [r.request_id for r in eng2.sched.running] == \
+        [r.request_id for r in eng.sched.running]
+    assert [r.request_id for r in eng2.sched.waiting] == \
+        [r.request_id for r in eng.sched.waiting]
+    r, r2 = eng.sched.running[0], eng2.sched.running[0]
+    assert (r2.seq_slot, r2.prefill_pos, r2.state, r2.emitted) == \
+        (r.seq_slot, r.prefill_pos, r.state, r.emitted)
+    assert eng2.sched._free_slots == eng.sched._free_slots
+    assert eng2.sched._plan_cursor == eng.sched._plan_cursor
+    np.testing.assert_array_equal(eng2.cache.block_table,
+                                  eng.cache.block_table)
+    assert eng2.cache.free_pages == eng.cache.free_pages
+    np.testing.assert_array_equal(np.asarray(eng2.cache.k_pool),
+                                  np.asarray(eng.cache.k_pool))
+
+
+def test_restore_rejects_mismatched_pool_shape(setup):
+    """A full blob from a differently-sized pool must be rejected —
+    silently reshaping int4 bytes would corrupt every sequence."""
+    cfg, qc, qparams = setup
+    eng = make_engine(setup)
+    blob = eng.snapshot(full=True)
+    with pytest.raises(ValueError, match="pool shape"):
+        Engine.restore(blob, cfg, qparams, qc,
+                       EngineConfig(**dict(ECFG, num_pages=32)))
+
+
+# ----------------------------------------------------------- recovery log
+
+
+def test_recovery_log_exactly_once_across_crash(setup):
+    """Crash between snapshots: the resumed log re-runs the gap, verifies
+    every replayed event bitwise against the journal, suppresses them
+    from delivery, and the union of (pre-crash, post-resume) deliveries
+    equals the uninterrupted run with no duplicates."""
+    cfg, qc, qparams = setup
+    prompts = _prompts(seed=13)
+    ref = _reference(setup, prompts)
+
+    eng = make_engine(setup)
+    log = RecoveryLog(eng, snapshot_every=4)
+    _submit_all(eng, prompts)
+    delivered = []
+    for _ in range(6):                   # snapshot at step 4; crash at 6
+        delivered.extend(log.step())
+    journaled_at_crash = len(log.journal)
+    assert journaled_at_crash > 0
+
+    log2 = RecoveryLog.resume(log.snapshot_blob, log.journal, cfg,
+                              qparams, qc, EngineConfig(**ECFG),
+                              snapshot_every=4)
+    delivered2 = log2.run()
+    # the 2-step gap re-ran: its events were journaled pre-crash, so
+    # they replay (verified) instead of redelivering
+    assert log2.replayed > 0
+    assert all(ev not in delivered for ev in delivered2)
+    keys = [(ev.request_id, ev.token, ev.num_generated)
+            for ev in delivered + delivered2 if ev.token is not None]
+    assert len(keys) == len(set(keys))           # exactly-once
+    for rid, toks in ref.items():
+        assert log2.tokens_for(rid) == toks      # journal == reference
+        term = log2.terminal_for(rid)
+        assert term is not None and term["state"] == "finished"
+    # per-request delivered streams reassemble the reference output
+    for rid, toks in ref.items():
+        got = [ev.token for ev in delivered + delivered2
+               if ev.request_id == rid and ev.token is not None]
+        assert got == toks
+
+
+def test_replay_mismatch_is_detected(setup):
+    """A tampered journal token makes the resumed run raise
+    ReplayMismatch — the bitwise-continuation check has teeth."""
+    cfg, qc, qparams = setup
+    eng = make_engine(setup)
+    log = RecoveryLog(eng, snapshot_every=4)
+    _submit_all(eng, _prompts(seed=17))
+    for _ in range(6):
+        log.step()
+    # tamper an event journaled AFTER the step-4 snapshot (the gap that
+    # will re-run on resume)
+    tampered = [dict(e) for e in log.journal]
+    gap = [e for e in tampered if e["ord"] != -1][-1]
+    gap["token"] = gap["token"] + 1
+    log2 = RecoveryLog.resume(log.snapshot_blob, tampered, cfg, qparams,
+                              qc, EngineConfig(**ECFG), snapshot_every=4)
+    with pytest.raises(ReplayMismatch):
+        log2.run()
+
+
+def test_dir_backed_recovery_survives_reload(setup, tmp_path):
+    """Directory mode: snapshot.json + journal.jsonl on disk, reopened
+    with open_dir after a process-style kill — the continuation matches
+    the uninterrupted reference and the journal is complete."""
+    cfg, qc, qparams = setup
+    d = str(tmp_path / "rlog")
+    prompts = _prompts(seed=21)
+    ref = _reference(setup, prompts)
+
+    eng = make_engine(setup)
+    log = RecoveryLog(eng, snapshot_every=3, dir=d)
+    _submit_all(eng, prompts)
+    for _ in range(5):
+        log.step()
+    del eng, log                         # the "kill"
+
+    log2 = RecoveryLog.open_dir(d, cfg, qparams, qc,
+                                EngineConfig(**ECFG), snapshot_every=3)
+    log2.run()
+    for rid, toks in ref.items():
+        assert log2.tokens_for(rid) == toks
+        assert log2.terminal_for(rid)["state"] == "finished"
+    # the on-disk journal matches the in-memory one (append-only, one
+    # JSON object per line)
+    with open(tmp_path / "rlog" / "journal.jsonl") as f:
+        on_disk = [json.loads(line) for line in f if line.strip()]
+    assert on_disk == log2.journal
+    assert (tmp_path / "rlog" / "snapshot.json").exists()
+
+
+def test_recovery_log_validates_snapshot_every():
+    with pytest.raises(ValueError, match="snapshot_every"):
+        RecoveryLog.__new__(RecoveryLog).__init__(None, snapshot_every=0)
+
+
+def test_recovery_under_failure_outcome_is_stable(setup):
+    """A request that FAILED before the crash stays failed after the
+    resume — terminal outcomes are part of the journaled contract, and
+    the terminal event is never redelivered."""
+    from repro.serving.faults import Fault, FaultInjector
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc, EngineConfig(**ECFG),
+                 faults=FaultInjector([Fault("forward", step=3,
+                                             action="nan", row=0)]))
+    log = RecoveryLog(eng, snapshot_every=2)
+    hs = _submit_all(eng, _prompts(seed=25), max_new=6)
+    delivered = []
+    for _ in range(5):
+        delivered.extend(log.step())
+    failed = [rid for rid, r in eng._by_id.items()
+              if r.state == RequestState.FAILED]
+    assert failed                        # the NaN quarantine landed
+    log2 = RecoveryLog.resume(log.snapshot_blob, log.journal, cfg,
+                              qparams, qc, EngineConfig(**ECFG),
+                              snapshot_every=2)
+    delivered2 = log2.run()
+    for rid in failed:
+        assert log2.terminal_for(rid)["state"] == "failed"
+        if any(e.request_id == rid and e.finished for e in delivered):
+            # terminal already delivered pre-crash → never redelivered
+            assert not any(ev.request_id == rid and ev.finished
+                           for ev in delivered2)
+    assert log2.engine.cache.pages_free == 64

@@ -216,3 +216,148 @@ def test_abort_releases_running_and_queued():
     assert not sched.abort(running, cache)        # terminal → no-op
     assert {r.request_id for r in sched.finished} == {0, 1}
     assert free_before_admit < 16                 # it really held pages
+
+
+# ------------------------------------------------ robustness: release/reject
+
+
+def test_release_is_membership_checked():
+    """Double-release is explicit, not silent: the second call returns
+    False and does not bump released_count (the old code swallowed the
+    ValueError from list.remove)."""
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8)
+    req = Request(0, [1, 2], 1, arrived_at=0.0)
+    sched.submit(req)
+    sched.admit(cache)
+    req.generated = [9]
+    sched.complete(req, cache)
+    assert sched.release(req) is True
+    assert sched.released_count == 1
+    assert sched.release(req) is False           # already gone
+    assert sched.released_count == 1
+    never_finished = Request(1, [3], 1, arrived_at=1.0)
+    assert sched.release(never_finished) is False
+
+
+def test_reject_and_waiting_full():
+    """Bounded waiting queue: waiting_full flips at max_waiting, and
+    reject() sends a request straight to FAILED("queue_full") without it
+    ever entering the queue."""
+    sched = Scheduler(max_batch=4, max_seqs=8, max_waiting=2)
+    assert not sched.waiting_full
+    sched.submit(Request(0, [1], 2, arrived_at=0.0))
+    sched.submit(Request(1, [2], 2, arrived_at=1.0))
+    assert sched.waiting_full
+    late = Request(2, [3], 2, arrived_at=2.0)
+    sched.reject(late)
+    assert late.state == RequestState.FAILED
+    assert late.stop_reason == "queue_full"
+    assert late in sched.finished and len(sched.waiting) == 2
+    # unbounded queue never reports full
+    assert not Scheduler(max_batch=4, max_seqs=8).waiting_full
+
+
+def test_preempt_sheds_victim_when_waiting_full():
+    """A preemption victim that cannot re-queue without overflowing the
+    bounded waiting queue is shed terminally (FAILED "shed") with its
+    partial output kept and its pages freed — not re-queued, not lost
+    silently."""
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8, max_waiting=1)
+    sched.submit(Request(0, [1, 2, 3], 10, arrived_at=0.0))
+    sched.submit(Request(1, [4, 5, 6], 10, arrived_at=1.0))
+    sched.admit(cache)
+    sched.submit(Request(2, [7, 8], 4, arrived_at=2.0))  # queue now full
+    free_before = cache.pages_free
+    for r in sched.running:
+        r.generated = [9]
+        r.prefilled = True
+    victim = sched.preempt_one(cache)
+    assert victim.request_id == 1                # youngest
+    assert victim.state == RequestState.FAILED
+    assert victim.stop_reason == "shed"
+    assert victim.generated == [9]               # partial output retained
+    assert victim in sched.finished and victim not in sched.waiting
+    assert cache.pages_free == free_before + 1   # its page came back
+    # with queue headroom the same preemption re-queues instead
+    sched2 = Scheduler(max_batch=4, max_seqs=8, max_waiting=5)
+    cache2 = make_cache()
+    sched2.submit(Request(0, [1, 2, 3], 10, arrived_at=0.0))
+    sched2.admit(cache2)
+    v2 = sched2.preempt_one(cache2)
+    assert v2.state == RequestState.QUEUED and v2 in sched2.waiting
+
+
+def test_expire_deadlines_running_and_waiting():
+    """expire_deadlines sweeps BOTH queues: running requests free their
+    pages refcount-exactly, waiting ones just leave the queue; requests
+    within budget (or without params) are untouched."""
+    from repro.serving.api import SamplingParams
+    cache = make_cache()
+    sched = Scheduler(max_batch=1, max_seqs=8)
+    doomed = Request(0, [1, 2, 3], 5, arrived_at=0.0,
+                     params=SamplingParams(max_new_tokens=5,
+                                           deadline_ms=10.0))
+    safe = Request(1, [4, 5], 5, arrived_at=0.0,
+                   params=SamplingParams(max_new_tokens=5,
+                                         deadline_ms=10_000.0))
+    queued_doomed = Request(2, [6], 5, arrived_at=0.0,
+                            params=SamplingParams(max_new_tokens=5,
+                                                  ttft_ms=10.0))
+    no_params = Request(3, [7], 5, arrived_at=0.0)
+    for r in (doomed, safe, queued_doomed, no_params):
+        sched.submit(r)
+    sched.admit(cache)                           # max_batch=1 → doomed runs
+    assert doomed in sched.running
+    doomed.generated = [8]
+    baseline = cache.pages_free
+    expired = sched.expire_deadlines(cache, now=0.020)   # 20ms elapsed
+    assert {r.request_id for r in expired} == {0, 2}
+    assert doomed.state == RequestState.TIMED_OUT
+    assert doomed.stop_reason == "deadline"
+    assert doomed.generated == [8]               # partial output retained
+    assert queued_doomed.stop_reason == "ttft_budget"
+    assert cache.pages_free == baseline + 1      # doomed's page freed
+    assert safe in sched.waiting and no_params in sched.waiting
+    # a request that already produced its first token is immune to TTFT
+    safe.first_token_at = 0.001
+    assert sched.expire_deadlines(cache, now=0.021) == []
+
+
+def test_full_snapshot_restore_keeps_exact_split():
+    """full=True keeps the waiting/running split, slots, prefill
+    cursors, free-slot order, and lifetime emitted counts — nothing is
+    demoted or folded (the bitwise-recovery contract)."""
+    cache = make_cache()
+    sched = Scheduler(max_batch=4, max_seqs=8, max_waiting=3)
+    sched.submit(Request(0, list(range(20)), 4, arrived_at=0.0))
+    sched.submit(Request(1, [1, 2, 3], 6, arrived_at=1.0))
+    sched.admit(cache, first_chunk_tokens=8)
+    run0 = sched.running[0]
+    run0.prefill_pos = 8                         # mid-prefill
+    run1 = sched.running[1]
+    run1.generated = [7, 9]
+    run1.prefilled = True
+    run1.emitted = 2
+    run1.state = RequestState.DECODING
+    sched.submit(Request(2, [4, 5], 3, arrived_at=2.0))   # stays waiting
+    sched._plan_cursor = 5
+
+    s2 = Scheduler.restore(sched.snapshot(full=True), 4, 8, max_waiting=3)
+    assert [r.request_id for r in s2.running] == [0, 1]
+    assert [r.request_id for r in s2.waiting] == [2]
+    r0, r1 = s2.running
+    assert (r0.seq_slot, r0.prefill_pos) == (run0.seq_slot, 8)
+    assert r0.prompt == list(range(20)) and r0.generated == []
+    assert (r1.seq_slot, r1.generated, r1.emitted) == \
+        (run1.seq_slot, [7, 9], 2)
+    assert r1.state == RequestState.DECODING
+    assert r1.max_new_tokens == 6                # NOT folded
+    assert s2._free_slots == sched._free_slots
+    assert s2._plan_cursor == 5
+    assert s2.max_waiting == 3
+    # legacy mode on the same state still demotes/folds (unchanged)
+    legacy = Scheduler.restore(sched.snapshot(), 4, 8)
+    lr1 = [r for r in legacy.waiting if r.request_id == 1][0]
+    assert lr1.prompt == [1, 2, 3, 7, 9] and lr1.max_new_tokens == 4

@@ -144,3 +144,73 @@ def test_sharded_rejects_indivisible_heads():
         Engine(bad, qp, QC,
                EngineConfig(max_batch=2, num_pages=32, page_size=8),
                mesh=make_local_mesh(1, TP), param_axes=qa)
+
+
+def test_sharded_fault_isolation_and_invariants(model):
+    """Chaos under TP: a NaN-logits fault quarantines one request while
+    the survivors keep decoding bitwise-identically to the single-device
+    engine under the SAME schedule, pages return to baseline, and
+    step() never raises on either side."""
+    from repro.serving.api import RequestState
+    from repro.serving.faults import Fault, FaultInjector
+    qparams, qaxes = model
+    prompts = _prompts((9, 12, 7), seed=13)
+    out = []
+    for mesh in (None, make_local_mesh(1, TP)):
+        eng = Engine(CFG, qparams, QC,
+                     EngineConfig(max_batch=4, num_pages=64, page_size=8,
+                                  kv_range=4.0),
+                     mesh=mesh, param_axes=qaxes if mesh else None,
+                     faults=FaultInjector([Fault("forward", step=3,
+                                                 action="nan", row=0)]))
+        for i, p in enumerate(prompts):
+            eng.add_request(i, p, 6)
+        eng.run(max_steps=300)
+        out.append(eng)
+    e1, e2 = out
+    assert e2.tp_size == TP
+    for eng in out:
+        assert eng.internal_errors == 0
+        assert eng.failed_count == 1
+        assert eng.cache.pages_free == 64
+        assert (eng.cache.ref == 0).all()
+    by_state = lambda e, s: sorted(
+        r.request_id for r in e.sched.finished if r.state == s)
+    assert by_state(e2, RequestState.FAILED) == \
+        by_state(e1, RequestState.FAILED)
+    # survivors' tokens stay bitwise equal to single-device
+    assert {r.request_id: list(r.generated)
+            for r in e2.sched.finished
+            if r.state == RequestState.FINISHED} == \
+        {r.request_id: list(r.generated)
+         for r in e1.sched.finished if r.state == RequestState.FINISHED}
+
+
+def test_sharded_full_snapshot_resumes_bitwise(model):
+    """snapshot(full=True)/restore under TP: restore re-lays the int4
+    pools over the mesh, and the continuation equals the uninterrupted
+    sharded run token-for-token."""
+    qparams, qaxes = model
+    mesh = make_local_mesh(1, TP)
+    ecfg = EngineConfig(max_batch=4, num_pages=64, page_size=8,
+                        kv_range=4.0)
+    prompts = _prompts((10, 15), seed=17)
+
+    ref_eng = Engine(CFG, qparams, QC, ecfg, mesh=mesh, param_axes=qaxes)
+    for i, p in enumerate(prompts):
+        ref_eng.add_request(i, p, 8)
+    ref = {r.request_id: list(r.generated)
+           for r in ref_eng.run(max_steps=300)}
+
+    eng = Engine(CFG, qparams, QC, ecfg, mesh=mesh, param_axes=qaxes)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 8)
+    for _ in range(4):
+        eng.step()                         # mid-decode "crash"
+    blob = eng.snapshot(full=True)
+    eng2 = Engine.restore(blob, CFG, qparams, QC, ecfg, mesh=mesh,
+                          param_axes=qaxes)
+    eng2.run(max_steps=300)
+    assert {r.request_id: list(r.generated)
+            for r in eng2.sched.finished} == ref
+    assert eng2.cache.pages_free == 64
