@@ -138,6 +138,12 @@ for _ in range(6):          # partial run, then the "crash"
 log2 = RecoveryLog.resume(log.snapshot_blob, log.journal,
                           cfg, qparams, quant, ecfg, snapshot_every=4)
 log2.run()
+done4 = [r for r in log2.engine.sched.finished
+         if r.request_id == h4.request_id][0]
 print(f"recovery: {log2.replayed} replayed events verified bitwise, "
-      f"tokens={log2.tokens_for(h4.request_id)} "
-      f"[{log2.terminal_for(h4.request_id)['state']}]")
+      f"tokens={done4.generated} [{done4.state.value}] "
+      f"(journal compacted {log2.compacted_total} dead entries at "
+      f"checkpoints, {len(log2.journal)} live)")
+
+# availability above one engine — N replicas, health-checked failover,
+# exactly-once migration: examples/failover_walkthrough.py

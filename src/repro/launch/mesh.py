@@ -9,11 +9,13 @@ before any jax import and then calls this.
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax
 import numpy as np
 
-__all__ = ["make_production_mesh", "make_local_mesh", "parse_mesh_arg"]
+__all__ = ["make_production_mesh", "make_local_mesh",
+           "make_replica_meshes", "parse_mesh_arg"]
 
 
 def parse_mesh_arg(spec: str) -> tuple[int, int]:
@@ -50,12 +52,55 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(np.array(devices[:n]).reshape(shape), axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+def make_local_mesh(data: int = 1, model: int = 1, *,
+                    allow_shrink: bool = False):
+    """Small ``(data, model)`` mesh over the local devices (tests / CPU
+    smoke).
+
+    The requested shape is honored exactly: asking for more devices than
+    exist raises, because a silently clamped mesh serves a DIFFERENT
+    topology than the one requested (``--mesh 2x4`` on 4 devices would
+    quietly run 1x4 — wrong replica count, wrong shard math, and every
+    downstream counter lies). ``allow_shrink=True`` restores the old
+    best-effort behavior for exploratory runs, but loudly: a
+    ``UserWarning`` reports the effective mesh whenever it differs from
+    the request."""
     devices = jax.devices()
     n = len(devices)
-    data = min(data, n)
-    model = min(model, max(1, n // data))
+    if data * model > n:
+        if not allow_shrink:
+            raise ValueError(
+                f"mesh ({data}, {model}) needs {data * model} devices "
+                f"but only {n} exist — set XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count={data * model} (CPU) or pass "
+                "allow_shrink=True to best-effort clamp")
+        data = min(data, n)
+        model = min(model, max(1, n // data))
+        warnings.warn(
+            f"make_local_mesh clamped to effective mesh "
+            f"(data={data}, model={model}) over {n} device(s)",
+            UserWarning, stacklevel=2)
     return jax.sharding.Mesh(
         np.array(devices[: data * model]).reshape(data, model),
         ("data", "model"))
+
+
+def make_replica_meshes(replicas: int, model: int = 1) -> list:
+    """Carve the local devices into ``replicas`` disjoint per-replica
+    meshes, each ``(data=1, model)`` — the data axis realized as N
+    independent engines (``serving/replication.py``) rather than one
+    mesh axis, since each replica owns a private page pool and
+    scheduler. Raises when ``replicas * model`` devices don't exist
+    (same strictness as :func:`make_local_mesh`)."""
+    devices = jax.devices()
+    need = replicas * model
+    if need > len(devices):
+        raise ValueError(
+            f"{replicas} replica(s) x model={model} needs {need} devices "
+            f"but only {len(devices)} exist — set XLA_FLAGS=--xla_force_"
+            f"host_platform_device_count={need} (CPU)")
+    return [
+        jax.sharding.Mesh(
+            np.array(devices[i * model:(i + 1) * model]).reshape(1, model),
+            ("data", "model"))
+        for i in range(replicas)]

@@ -22,7 +22,15 @@ fault schedule (``serving/faults.py`` grammar, e.g.
 ``"forward:step=3,action=nan;alloc_page:nth=20"``) to chaos-test the
 step-level isolation, and ``--snapshot-every N`` rides a journaled
 :class:`~repro.serving.recovery.RecoveryLog` along with the run (full
-engine snapshot every N steps + per-token event journal). The
+engine snapshot every N steps + per-token event journal).
+
+Replicated serving (``serving/replication.py``): ``--replicas N`` runs
+N engine replicas behind a :class:`ReplicaGroup` — least-loaded
+routing, per-step health checks, RecoveryLog artifact shipping —
+with ``--failover standby|migrate`` picking the death policy and
+``--kill-replica-at STEP`` (``--kill-replica IDX``) arming the
+deterministic ``crash`` fault for failover smokes; the ``[group]``
+summary line reports failovers/migrations/health. The
 end-of-run summary reports throughput, prefix-cache hit rate + eviction
 counters, schedule work/grid counters (per shard under TP), lifecycle
 counts (aborted/failed/timed-out/shed/rejected), and the fired faults.
@@ -53,6 +61,118 @@ from repro.models.lm import LM, QuantConfig
 from repro.serving.engine import Engine, EngineConfig, SamplingParams
 
 
+def _group_ecfg(args) -> EngineConfig:
+    """Per-replica engine config for the ReplicaGroup path. Fault specs
+    are armed through explicit per-replica injectors (so
+    ``--kill-replica-at`` targets one replica), never via
+    ``inject_faults`` — the group hands each engine its injector."""
+    return EngineConfig(
+        max_batch=args.max_batch, num_pages=args.pages,
+        page_size=args.page_size, temperature=args.temperature,
+        prefill_mode=args.prefill_mode,
+        prefill_chunk_tokens=args.prefill_chunk,
+        kv_range=args.kv_range,
+        unified_step=(args.step_mode == "unified"),
+        prefix_cache=(args.prefix_cache == "on"),
+        attention_schedule=args.attention_schedule,
+        prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None),
+        max_waiting=(args.max_waiting or None))
+
+
+def _run_group(args, cfg, qparams, qaxes, quant, model: int):
+    """Drive a ReplicaGroup over the synthetic trace (--replicas N)."""
+    from repro.launch.mesh import make_replica_meshes
+    from repro.serving.faults import Fault, FaultInjector
+    from repro.serving.replication import ReplicaGroup
+
+    meshes = None
+    if model > 1:
+        meshes = make_replica_meshes(args.replicas, model)
+        print(f"[mesh] {args.replicas} replica(s) x (data=1, "
+              f"model={model}) over {jax.device_count()} "
+              f"{jax.default_backend()} device(s)", flush=True)
+    faults = []
+    for i in range(args.replicas):
+        inj = (FaultInjector.from_spec(args.inject_faults)
+               if args.inject_faults else FaultInjector())
+        if args.kill_replica_at and i == args.kill_replica:
+            inj.faults.append(Fault("crash", step=args.kill_replica_at))
+        faults.append(inj)
+    group = ReplicaGroup(
+        cfg, qparams, quant, _group_ecfg(args),
+        replicas=args.replicas, failover=args.failover,
+        snapshot_every=(args.snapshot_every or 4), faults=faults,
+        meshes=meshes, param_axes=qaxes)
+
+    rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=args.shared_prefix).tolist()
+    sp = SamplingParams(max_new_tokens=args.max_new,
+                        temperature=args.temperature, top_k=args.top_k,
+                        deadline_ms=(args.deadline_ms or None),
+                        ttft_ms=(args.ttft_ms or None))
+    prompts = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        prompts.append(shared
+                       + rng.integers(0, cfg.vocab_size, size=plen).tolist())
+    pending = [(i * args.arrival_every, p) for i, p in enumerate(prompts)]
+
+    def stream_cb(ev):
+        # lifetime ordinal from the GROUP record (a migrated request's
+        # engine-local num_generated restarts after the fold; the group
+        # count is the client-visible stream position)
+        if ev.token is not None:
+            n = len(group.delivered.get(ev.request_id, []))
+            print(f"  [stream] req {ev.request_id} +tok {ev.token} "
+                  f"(#{n})", flush=True)
+        elif ev.finished:
+            print(f"  [stream] req {ev.request_id} {ev.state.value}"
+                  + (f" ({ev.stop_reason})" if ev.stop_reason else ""),
+                  flush=True)
+
+    t0 = time.time()
+    gsteps = 0
+    while (pending or group.has_work) and gsteps < 10_000:
+        while pending and pending[0][0] <= gsteps:
+            _, prompt = pending.pop(0)
+            group.submit(prompt, sp,
+                         on_event=stream_cb if args.stream else None)
+        group.step()
+        gsteps += 1
+    dt = time.time() - t0
+
+    total_tokens = sum(len(v) for v in group.delivered.values())
+    print(f"[done] {len(group.terminals)} requests, {total_tokens} "
+          f"tokens in {dt:.1f}s → {total_tokens/max(dt, 1e-9):.1f} tok/s "
+          f"(group_steps={gsteps}, replica_steps={group.replica_steps})",
+          flush=True)
+    c = group.counters()
+    health = " ".join(f"r{i}={h}" for i, h in sorted(c["health"].items()))
+    print(f"[group] replicas={args.replicas} failover={args.failover} "
+          f"failovers={c['failovers']} "
+          f"migrated={c['migrated_requests']} "
+          f"replica_steps={c['replica_steps']} "
+          f"dup_suppressed={c['duplicates_suppressed']} "
+          f"internal_errors={c['internal_errors']} {health}", flush=True)
+    live = [r for r in group.replicas if r.alive]
+    print(f"[robust] failed="
+          f"{sum(r.engine.failed_count for r in live)} timed_out="
+          f"{sum(r.engine.timeout_count for r in live)} shed="
+          f"{sum(r.engine.shed_count for r in live)} rejected="
+          f"{sum(r.engine.rejected_count for r in live)} "
+          f"internal_errors={c['internal_errors']}", flush=True)
+    for rep in group.replicas:
+        if rep.engine.faults.fired:
+            fired = [f"{p}:{a}@step{s}"
+                     for p, a, s in rep.engine.faults.fired]
+            print(f"[faults] replica {rep.idx}: fired {', '.join(fired)}",
+                  flush=True)
+    for idx, why, step in group.deaths:
+        print(f"[death] replica {idx} at engine step {step} ({why})",
+              flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -74,6 +194,12 @@ def main():
                     choices=["chunked", "whole"])
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="ragged-prefill token budget per step")
+    ap.add_argument("--kv-range", type=float, default=16.0,
+                    help="calibrated |k|,|v| range for the int4 KV "
+                         "scales; tighter ranges reduce quantization "
+                         "error (decode reads quantized KV, prefill "
+                         "attends to same-chunk KV in full precision, "
+                         "so fold/migration parity tightens with it)")
     ap.add_argument("--step-mode", default="unified",
                     choices=["unified", "split"],
                     help="unified: ONE forward/step over decode rows + "
@@ -126,7 +252,27 @@ def main():
                          "serving, e.g. 1x4 shards heads + KV pools over "
                          "4 devices (CPU smoke: set XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=N first). 1x1 = "
-                         "single-device (default)")
+                         "single-device (default). Asking for more "
+                         "devices than exist is an error (no silent "
+                         "clamping)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run N engine replicas behind a ReplicaGroup "
+                         "(params replicated, page pools + scheduler "
+                         "per-replica; least-loaded routing, per-step "
+                         "health checks, failover). With --mesh 1xM each "
+                         "replica shards over its own M-device slice")
+    ap.add_argument("--failover", default="migrate",
+                    choices=["standby", "migrate"],
+                    help="replica-death policy: promote a standby engine "
+                         "resumed from the shipped RecoveryLog artifacts "
+                         "into the dead slot, or migrate the dead "
+                         "replica's in-flight requests to the survivors")
+    ap.add_argument("--kill-replica-at", type=int, default=0,
+                    help="deterministically kill one replica before its "
+                         "Nth engine step (the 'crash' fault point; "
+                         "0 = never) — the failover smoke")
+    ap.add_argument("--kill-replica", type=int, default=0,
+                    help="which replica index --kill-replica-at kills")
     ap.add_argument("--head-dim", type=int, default=0,
                     help="override cfg.head_dim (0 = keep). The smoke "
                          "configs use head_dim=32 → q_dim=128, too small "
@@ -151,15 +297,16 @@ def main():
     del params
 
     data, model = parse_mesh_arg(args.mesh)
+    if args.replicas > 1:
+        _run_group(args, cfg, qparams, qaxes, quant, model)
+        return
     mesh = None
     if model > 1:
+        # strict: make_local_mesh raises when the requested topology
+        # doesn't fit the devices — no silently different mesh
         mesh = make_local_mesh(data, model)
-        got = int(mesh.shape["model"])
-        if got != model:
-            print(f"[warn] --mesh asked model={model} but only "
-                  f"{len(jax.devices())} device(s) exist → model={got}",
-                  flush=True)
-        print(f"[mesh] (data={mesh.shape['data']}, model={got}) over "
+        print(f"[mesh] (data={mesh.shape['data']}, "
+              f"model={int(mesh.shape['model'])}) over "
               f"{jax.device_count()} {jax.default_backend()} device(s)",
               flush=True)
 
@@ -168,6 +315,7 @@ def main():
         page_size=args.page_size, temperature=args.temperature,
         prefill_mode=args.prefill_mode,
         prefill_chunk_tokens=args.prefill_chunk,
+        kv_range=args.kv_range,
         unified_step=(args.step_mode == "unified"),
         prefix_cache=(args.prefix_cache == "on"),
         attention_schedule=args.attention_schedule,

@@ -54,7 +54,9 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     lm = LM(cfg)
-    mesh = make_local_mesh(args.data, args.model)
+    # best-effort for the smoke trainer: shrinking warns and reports the
+    # effective mesh instead of aborting the run
+    mesh = make_local_mesh(args.data, args.model, allow_shrink=True)
 
     params, axes = lm.init(jax.random.PRNGKey(args.seed))
     opt_cfg = OPT.AdamWConfig(

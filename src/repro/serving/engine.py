@@ -142,7 +142,11 @@ allocator free-list/LRU order, the exact waiting/running split and
 cursors — so ``restore`` of a full blob resumes the very next step
 bit-identically (nothing re-prefills); ``serving/recovery.py`` pairs it
 with a per-token event journal for exactly-once redelivery and a
-bitwise replay check.
+bitwise replay check. Availability above one engine lives in
+``serving/replication.py``: a :class:`ReplicaGroup` runs N engines on
+the data axis, health-checks each step, ships the RecoveryLog
+artifacts after every healthy step, and fails over (standby promotion
+or exactly-once request migration) from the shipped view.
 """
 
 from __future__ import annotations
@@ -413,6 +417,11 @@ class Engine:
         self._sample_fns: dict = {}        # kmax → jitted batched sampler
         self._by_id: dict[int, Request] = {}
         self._next_id = 0
+        # monotonically increasing submission counter: request_ids are
+        # REUSABLE after release(), so anything that must key per-request
+        # state durably (the recovery journal, replica migration) keys by
+        # Request.uid — the incarnation-qualified id — instead
+        self._submit_seq = 0
         self._events: list[RequestOutput] = []
 
     # --------------------------------------------------- tensor parallelism
@@ -512,7 +521,8 @@ class Engine:
         req = Request(
             request_id=request_id, prompt=list(prompt),
             max_new_tokens=params.max_new_tokens, arrived_at=self.clock(),
-            params=params, on_event=on_event)
+            params=params, on_event=on_event, uid=self._submit_seq)
+        self._submit_seq += 1
         self._by_id[request_id] = req
         if self.sched.waiting_full:
             self.sched.reject(req)
@@ -628,6 +638,7 @@ class Engine:
                 "steps": self.steps,
                 "tokens_generated": self.tokens_generated,
                 "next_id": self._next_id,
+                "submit_seq": self._submit_seq,
             })
         return self.sched.snapshot()
 
@@ -657,13 +668,29 @@ class Engine:
             eng._by_id = {r.request_id: r for r in
                           list(eng.sched.waiting) + eng.sched.running
                           + eng.sched.finished}
+            eng._restore_uids(state.get("submit_seq"))
             return eng
         eng.sched = Scheduler.restore(blob, ecfg.max_batch,
                                       ecfg.max_batch * 2,
                                       max_waiting=ecfg.max_waiting)
         eng._by_id = {r.request_id: r for r in
                       list(eng.sched.waiting) + eng.sched.finished}
+        eng._restore_uids(None)
         return eng
+
+    def _restore_uids(self, submit_seq):
+        """Re-establish the incarnation counter after a restore: blobs
+        from before uid tracking (or the legacy scheduler snapshot) carry
+        requests with ``uid == -1`` — assign them fresh uids so the
+        recovery journal's ``(uid, ord)`` keys stay collision-free."""
+        reqs = (list(self.sched.waiting) + self.sched.running
+                + self.sched.finished)
+        top = max((r.uid for r in reqs), default=-1) + 1
+        self._submit_seq = max(top, submit_seq or 0)
+        for r in reqs:
+            if r.uid < 0:
+                r.uid = self._submit_seq
+                self._submit_seq += 1
 
     # ----------------------------------------------------------- events
 

@@ -33,10 +33,25 @@ Fault points (the names the engine/cache fire):
   ``raise`` simulates a throwing client callback (the engine detaches
   the callback and keeps the request alive — the event log is intact).
 
+Two points model *process-level* failures (consulted by the layers
+wrapping the engine, never by ``Engine.step`` itself):
+
+* ``crash``       — consulted by ``serving/replication.py``'s
+  :class:`ReplicaGroup` at the top of each replica step; action
+  ``kill`` marks the WHOLE replica dead before the step runs (its
+  in-memory engine state is considered lost with the process — the
+  controller recovers only from the shipped RecoveryLog artifacts).
+* ``snapshot_write`` — consulted by ``RecoveryLog._write_snapshot``;
+  action ``torn`` writes a partial temp file and then raises (a kill
+  mid-write), proving the atomic-rename contract: the last good
+  ``snapshot.json`` must survive untouched.
+
 Schedules come from three constructors: explicit :class:`Fault` lists,
 the CLI spec grammar (:meth:`FaultInjector.from_spec`, e.g.
 ``"forward:step=3,action=nan;alloc_page:nth=20"``), and seeded random
-mixes for chaos sweeps (:meth:`FaultInjector.random_schedule`).
+mixes for chaos sweeps (:meth:`FaultInjector.random_schedule` — drawn
+from the five in-engine points only, so pre-existing seeded schedules
+are stable; pass ``points=`` to include the process-level ones).
 
 Each armed fault fires exactly once. ``hits`` counts every consultation
 per point and ``fired`` records what actually tripped (point, action,
@@ -51,10 +66,15 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["Fault", "FaultInjector", "InjectedFault", "FAULT_POINTS"]
+__all__ = ["Fault", "FaultInjector", "InjectedFault", "FAULT_POINTS",
+           "ENGINE_FAULT_POINTS"]
 
-FAULT_POINTS = ("alloc_page", "forward", "sample", "append_kv",
-                "emit_event")
+# the five points Engine.step/PagedKV4Cache consult directly
+ENGINE_FAULT_POINTS = ("alloc_page", "forward", "sample", "append_kv",
+                       "emit_event")
+# plus the process-level points consulted by the wrapping layers
+# (ReplicaGroup / RecoveryLog)
+FAULT_POINTS = ENGINE_FAULT_POINTS + ("crash", "snapshot_write")
 
 # legal actions per point (first entry = the default)
 _ACTIONS = {
@@ -63,6 +83,8 @@ _ACTIONS = {
     "sample": ("raise",),
     "append_kv": ("raise",),
     "emit_event": ("raise",),
+    "crash": ("kill",),
+    "snapshot_write": ("torn",),
 }
 
 
@@ -185,7 +207,7 @@ class FaultInjector:
     @classmethod
     def random_schedule(cls, seed: int, n_faults: int = 3,
                         max_step: int = 30,
-                        points=FAULT_POINTS) -> "FaultInjector":
+                        points=ENGINE_FAULT_POINTS) -> "FaultInjector":
         """A seeded random mix of faults for chaos sweeps — the same
         seed always builds the same schedule, so a failing sweep replays
         exactly from its seed."""

@@ -16,13 +16,28 @@ pairing two artifacts:
   (``Request.emitted``). A restore resumes the very next step
   bit-identically — nothing re-prefills, so the fp-vs-int4 numerics
   hazard never arises.
-* **A per-token event journal**: every event the engine emits is logged
-  under the key ``(request_id, lifetime ordinal)`` — the ordinal is the
-  request's ``emitted`` cursor, NOT ``len(generated)`` (which resets
-  when a preemption folds generated text back into the prompt, so two
-  different tokens could collide on the same key across incarnations).
-  Terminal events use the sentinel ordinal -1 (exactly one per request,
-  so the key is naturally unique).
+* **A per-token event journal** covering exactly the gap since the last
+  snapshot: every event the engine emits is logged under the key
+  ``(uid, lifetime ordinal)``. ``uid`` is the request's
+  incarnation-qualified id (``Request.uid``, an engine-lifetime
+  monotonic submit counter) — NOT the ``request_id``, which is reusable
+  after ``Engine.release()`` and would let a new request's fresh tokens
+  collide with a dead request's journal keys (silently suppressed as
+  "replays", or spuriously flagged ``ReplayMismatch``). The ordinal is
+  the request's ``emitted`` cursor, NOT ``len(generated)`` (which
+  resets when a preemption folds generated text back into the prompt).
+  Terminal events use the sentinel ordinal -1 (exactly one per
+  incarnation, so the key is naturally unique).
+
+**Compaction.** A journal entry at or before the last full snapshot's
+per-request ``emitted`` cursor can never be replayed: a restore from
+that snapshot seeds every request's delivery cursor AT the snapshot, so
+re-run steps only regenerate events past it. Each checkpoint therefore
+drops the dead prefix — in memory, and in dir mode by atomically
+rewriting ``journal.jsonl`` (write-temp + rename, same contract as the
+snapshot) — so both artifacts stay bounded by one snapshot interval of
+traffic instead of growing with lifetime traffic. ``journaled_total`` /
+``compacted_total`` count lifetime entries for observability.
 
 Recovery replays the gap between the last snapshot and the crash: the
 restored engine re-runs those steps, and every event it re-emits that is
@@ -35,7 +50,24 @@ across the crash.
 Two modes: in-memory (tests hand ``RecoveryLog.resume`` the old log's
 ``snapshot_blob``/``journal``) and directory-backed (``dir=`` writes
 ``snapshot.json`` atomically + appends ``journal.jsonl`` per step;
-``RecoveryLog.open_dir`` rebuilds after a real process kill).
+``RecoveryLog.open_dir`` rebuilds after a real process kill). The
+``snapshot_write`` fault point (``serving/faults.py``) tears the
+snapshot temp file mid-write to prove the rename keeps the last good
+snapshot intact.
+
+**The replica-group seam.** ``serving/replication.py`` builds
+multi-replica availability on exactly this pair of artifacts: each
+serving replica drives its engine through a private ``RecoveryLog``,
+and after every healthy step the :class:`ReplicaGroup` controller
+"ships" ``(snapshot_blob, journal, steps)`` — the standby's durable
+view. A replica death is recovered ONLY from that shipped view (the
+dead engine's live memory is never trusted): ``RecoveryLog.resume``
+restores at the last shipped snapshot and the re-run gap is verified/
+suppressed against the shipped journal, which is what makes failover
+exactly-once and bitwise — whether the resumed engine is promoted whole
+(standby mode) or drained into survivors (migrate mode). What is
+per-replica: the engine, pools, scheduler, this log. What is
+group-global: request ids, the delivered-event record, routing.
 """
 
 from __future__ import annotations
@@ -43,6 +75,8 @@ from __future__ import annotations
 import json
 import os
 from typing import Optional
+
+from repro.serving.faults import InjectedFault
 
 __all__ = ["RecoveryLog", "ReplayMismatch"]
 
@@ -58,11 +92,13 @@ class RecoveryLog:
     """Rides along with an :class:`~repro.serving.engine.Engine`: drive
     steps through :meth:`step` (instead of ``engine.step()`` +
     ``engine.events()``) and the log journals every event, checkpoints a
-    full snapshot every ``snapshot_every`` steps, and — after a resume —
-    verifies and deduplicates the replayed gap.
+    full snapshot every ``snapshot_every`` steps (compacting the journal
+    down to the new gap), and — after a resume — verifies and
+    deduplicates the replayed gap.
 
-    ``journal`` entries: ``{"rid", "ord", "token", "state", "stop"}``
-    (``ord`` = lifetime token ordinal, -1 for the terminal event).
+    ``journal`` entries: ``{"rid", "uid", "ord", "token", "state",
+    "stop"}`` (``ord`` = lifetime token ordinal, -1 for the terminal
+    event; ``uid`` = the incarnation-qualified id entries are keyed by).
     """
 
     def __init__(self, engine, snapshot_every: int = 8,
@@ -74,14 +110,18 @@ class RecoveryLog:
         self.snapshot_every = snapshot_every
         self.dir = dir
         self.journal: list[dict] = list(_journal or [])
-        self._by_key = {(e["rid"], e["ord"]): e for e in self.journal}
+        self._by_key = {(e["uid"], e["ord"]): e for e in self.journal}
         # per-request delivery cursor: the next token event's lifetime
-        # ordinal. Seeded from the (restored) requests' emitted counts
-        # so replayed tokens key to the SAME ordinals the crashed run
-        # journaled them under.
-        self._cursor = {rid: r.emitted for rid, r in engine._by_id.items()}
+        # ordinal, keyed by uid. Seeded from the (restored) requests'
+        # emitted counts so replayed tokens key to the SAME ordinals the
+        # crashed run journaled them under.
+        self._cursor = {r.uid: r.emitted for r in engine._by_id.values()}
+        self._uid_of = {r.request_id: r.uid
+                        for r in engine._by_id.values()}
         self.replayed = 0           # journaled events re-emitted + verified
         self.steps_logged = 0
+        self.journaled_total = len(self.journal)   # lifetime entries seen
+        self.compacted_total = 0    # entries dropped as unreplayable
         self._snapshot = _snapshot if _snapshot is not None \
             else engine.snapshot(full=True)
         self._snapshot_step = engine.steps
@@ -96,13 +136,48 @@ class RecoveryLog:
         """The latest checkpointed full snapshot (NOT live state)."""
         return self._snapshot
 
+    @property
+    def snapshot_step(self) -> int:
+        """Engine step the latest checkpoint was taken at."""
+        return self._snapshot_step
+
     def checkpoint(self):
         """Take a full snapshot now (normally automatic via
-        ``snapshot_every``)."""
+        ``snapshot_every``) and compact the journal: entries at or
+        before the new snapshot's per-request ``emitted`` cursors can
+        never replay — a resume from this snapshot starts every
+        delivery cursor at the snapshot — so they are dropped in memory
+        and ``journal.jsonl`` is atomically rewritten to match."""
         self._snapshot = self.engine.snapshot(full=True)
         self._snapshot_step = self.engine.steps
+        self._compact()
         if self.dir is not None:
             self._write_snapshot()
+            self._rewrite_journal()
+
+    def _compact(self):
+        """Drop journal entries the latest snapshot makes unreplayable.
+
+        Keep an entry only if its request is live in the snapshot
+        (released requests can never re-emit), non-terminal there (a
+        terminal request restores with ``terminal_emitted`` set), and —
+        for token entries — its ordinal is at or past the snapshot's
+        ``emitted`` cursor. Taken at checkpoint time this retains
+        nothing (the snapshot IS the present), but the predicate is the
+        contract, not "clear()": a journal handed in by ``resume`` may
+        already trail the snapshot it rides with."""
+        live = {r.uid: r for r in self.engine._by_id.values()}
+
+        def replayable(e):
+            r = live.get(e["uid"])
+            if r is None or r.state.terminal:
+                return False
+            return e["ord"] != _TERMINAL and e["ord"] >= r.emitted
+
+        kept = [e for e in self.journal if replayable(e)]
+        self.compacted_total += len(self.journal) - len(kept)
+        self.journal = kept
+        self._by_key = {(e["uid"], e["ord"]): e for e in kept}
 
     def step(self):
         """One engine step → the step's FRESH events (replayed
@@ -111,30 +186,36 @@ class RecoveryLog:
         fresh = []
         new_entries = []
         for ev in self.engine.events():
+            req = self.engine._by_id.get(ev.request_id)
+            if req is not None:
+                self._uid_of[ev.request_id] = req.uid
+            uid = self._uid_of.get(ev.request_id, ev.request_id)
             if ev.token is not None:
-                ordn = self._cursor.get(ev.request_id, 0)
-                self._cursor[ev.request_id] = ordn + 1
+                ordn = self._cursor.get(uid, 0)
+                self._cursor[uid] = ordn + 1
             else:
                 ordn = _TERMINAL
-            entry = {"rid": ev.request_id, "ord": ordn,
+            entry = {"rid": ev.request_id, "uid": uid, "ord": ordn,
                      "token": ev.token, "state": ev.state.value,
                      "stop": ev.stop_reason}
-            prior = self._by_key.get((ev.request_id, ordn))
+            prior = self._by_key.get((uid, ordn))
             if prior is not None:
                 # the crashed run already delivered this event: verify
                 # the replay is bitwise identical, deliver nothing
                 if prior["token"] != entry["token"]:
                     raise ReplayMismatch(
-                        f"request {ev.request_id} token ordinal {ordn}: "
-                        f"replay produced {entry['token']}, journal has "
+                        f"request {ev.request_id} (uid {uid}) token "
+                        f"ordinal {ordn}: replay produced "
+                        f"{entry['token']}, journal has "
                         f"{prior['token']} — continuation is not "
                         "bit-identical")
                 self.replayed += 1
                 continue
             self.journal.append(entry)
-            self._by_key[(ev.request_id, ordn)] = entry
+            self._by_key[(uid, ordn)] = entry
             new_entries.append(entry)
             fresh.append(ev)
+        self.journaled_total += len(new_entries)
         if self.dir is not None and new_entries:
             with open(os.path.join(self.dir, "journal.jsonl"), "a") as f:
                 for e in new_entries:
@@ -153,12 +234,16 @@ class RecoveryLog:
         return out
 
     def tokens_for(self, rid: int) -> list[int]:
-        """The journaled token stream for one request, in order."""
+        """The journaled token stream for one request SINCE THE LAST
+        CHECKPOINT (compaction drops older entries), in order. The full
+        delivered history is the caller's to keep — e.g.
+        ``ReplicaGroup`` records every delivered token per request."""
         return [e["token"] for e in self.journal
                 if e["rid"] == rid and e["ord"] != _TERMINAL]
 
     def terminal_for(self, rid: int) -> Optional[dict]:
-        return self._by_key.get((rid, _TERMINAL))
+        uid = self._uid_of.get(rid, rid)
+        return self._by_key.get((uid, _TERMINAL))
 
     # -------------------------------------------------------------- recovery
 
@@ -193,8 +278,28 @@ class RecoveryLog:
 
     def _write_snapshot(self):
         # atomic: a kill mid-write must not corrupt the last good
-        # snapshot (rename is atomic on POSIX)
+        # snapshot (rename is atomic on POSIX). The snapshot_write fault
+        # point simulates exactly that kill: a torn temp file, the
+        # rename never reached — open_dir must still restore from the
+        # previous good snapshot.json.
         tmp = os.path.join(self.dir, "snapshot.json.tmp")
+        fault = self.engine.faults.check("snapshot_write")
+        if fault is not None:
+            with open(tmp, "w") as f:
+                f.write(self._snapshot[: max(1, len(self._snapshot) // 2)])
+            raise InjectedFault(
+                "snapshot_write: killed mid-write (torn temp file)")
         with open(tmp, "w") as f:
             f.write(self._snapshot)
         os.replace(tmp, os.path.join(self.dir, "snapshot.json"))
+
+    def _rewrite_journal(self):
+        # same atomicity contract as the snapshot: the compacted journal
+        # replaces journal.jsonl via write-temp + rename, so a kill
+        # mid-rewrite leaves the previous (superset) journal — replaying
+        # against a superset only suppresses more, never redelivers
+        tmp = os.path.join(self.dir, "journal.jsonl.tmp")
+        with open(tmp, "w") as f:
+            for e in self.journal:
+                f.write(json.dumps(e) + "\n")
+        os.replace(tmp, os.path.join(self.dir, "journal.jsonl"))

@@ -75,6 +75,11 @@ class Request:
     params: Optional[SamplingParams] = None   # None → engine defaults
     state: RequestState = RequestState.QUEUED
     cached_tokens: int = 0         # prefix-cache hit tokens, last admission
+    uid: int = -1                  # incarnation-qualified id: request_ids
+    #                                are reusable after release(), so the
+    #                                recovery journal and replica-group
+    #                                routing key by this engine-lifetime
+    #                                monotonic counter instead
     emitted: int = 0               # lifetime token events (survives the
     #                                preemption fold — the journal's
     #                                per-request delivery cursor)
@@ -357,6 +362,17 @@ class Scheduler:
             expired.append(req)
         return expired
 
+    def drain_waiting(self) -> list[Request]:
+        """Hand off the ENTIRE waiting queue (FCFS order) — the replica-
+        group migration seam. Waiting requests hold no pages or slots,
+        so draining them off a recovered replica and resubmitting them
+        to a survivor is pure bookkeeping: the drained requests leave
+        this scheduler entirely (they are not failed, not finished —
+        their lifecycle continues on whichever engine readmits them)."""
+        drained = list(self.waiting)
+        self.waiting.clear()
+        return drained
+
     def release(self, req: Request) -> bool:
         """Forget a terminal request (bounded retention): drop it from
         ``finished`` so scheduler state scales with in-flight work, not
@@ -389,6 +405,7 @@ class Scheduler:
             "first_token_at": r.first_token_at,
             "cached_tokens": r.cached_tokens,
             "emitted": r.emitted,
+            "uid": r.uid,
             "seq_slot": r.seq_slot,
             "prefill_pos": r.prefill_pos,
             "state": r.state.value,
@@ -408,6 +425,7 @@ class Scheduler:
             first_token_at=e.get("first_token_at", 0.0),
             cached_tokens=e.get("cached_tokens", 0),
             emitted=e.get("emitted", 0),
+            uid=e.get("uid", -1),
             params=SamplingParams(**params) if params else None)
         req.generated = list(e.get("generated", []))
         req.seq_slot = e.get("seq_slot", -1)

@@ -130,6 +130,48 @@ def test_batch_spec_pod_axis():
     assert SH.batch_spec(mesh2) == P("data")
 
 
+def test_make_local_mesh_refuses_silent_clamp():
+    """Asking for more devices than exist must raise by default — a
+    silently clamped mesh serves a different topology than requested
+    (--mesh 2x4 on one device would quietly run 1x1)."""
+    from repro.launch.mesh import make_local_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        make_local_mesh(n + 1, 1)
+    with pytest.raises(ValueError, match="devices"):
+        make_local_mesh(2, n)               # 2*n > n for any n >= 1
+    # a fitting request is honored exactly
+    mesh = make_local_mesh(1, 1)
+    assert (int(mesh.shape["data"]), int(mesh.shape["model"])) == (1, 1)
+
+
+def test_make_local_mesh_allow_shrink_warns_with_effective_mesh():
+    """allow_shrink=True restores the best-effort clamp, but loudly: a
+    UserWarning names the effective mesh actually built."""
+    from repro.launch.mesh import make_local_mesh
+    n = len(jax.devices())
+    with pytest.warns(UserWarning, match="effective mesh"):
+        mesh = make_local_mesh(n + 1, n + 1, allow_shrink=True)
+    assert int(mesh.shape["data"]) * int(mesh.shape["model"]) <= n
+
+
+def test_make_replica_meshes_disjoint_slices():
+    """Per-replica meshes carve disjoint device slices (data axis as N
+    independent engines) and refuse to oversubscribe."""
+    from repro.launch.mesh import make_replica_meshes
+    n = len(jax.devices())
+    meshes = make_replica_meshes(n, model=1)
+    assert len(meshes) == n
+    seen = set()
+    for m in meshes:
+        assert (int(m.shape["data"]), int(m.shape["model"])) == (1, 1)
+        ids = {d.id for d in m.devices.flat}
+        assert not ids & seen               # disjoint
+        seen |= ids
+    with pytest.raises(ValueError, match="devices"):
+        make_replica_meshes(n + 1, model=1)
+
+
 def test_dryrun_smoke_subprocess():
     """Lower+compile one smoke cell on 8 fake devices in a subprocess
     (isolates the XLA device-count env from this process)."""
