@@ -1,0 +1,20 @@
+"""Static analysis for the serving core's repo contracts (cometlint).
+
+The engine's COMET-style guarantees — refcount-exact int4 page pools,
+exactly-once event delivery, one-forward-per-step jit hygiene, bitwise
+snapshot/restore — are conventions that reviewers have already missed at
+least once each. This package machine-checks them:
+
+- ``python -m repro.analysis.cometlint src/ tests/`` runs the AST rules
+  R1 (snapshot-completeness), R2 (jit-argnum hygiene), R3 (fault-point
+  coverage), R4 (exception-swallow), R5 (counter-registry drift) and
+  R6 (host/device boundary) with a zero-findings CI gate.
+- ``EngineConfig(sanitize=True)`` is the paired RUNTIME mode: the same
+  invariants asserted live at every ``Engine.step()`` boundary
+  (``serving/sanitize.py``).
+
+``docs/invariants.md`` maps each rule to the guarantee it protects, the
+historical bug that motivated it, and the recipe for adding a rule.
+"""
+
+from .rules import Finding, Project, RULES, run_rules  # noqa: F401

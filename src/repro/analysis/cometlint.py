@@ -1,0 +1,67 @@
+"""cometlint — the repo-contract static analyzer (CLI driver).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.cometlint src/ tests/
+    PYTHONPATH=src python -m repro.analysis.cometlint --rules R1,R4 src/
+    PYTHONPATH=src python -m repro.analysis.cometlint --json src/ tests/
+
+Exit status 0 iff zero findings (the CI ``lint-cpu`` gate). The rules
+(R1–R6) live in :mod:`repro.analysis.rules`; what each one protects is
+catalogued in ``docs/invariants.md``. Directories named ``fixtures`` are
+never scanned — that is where the deliberately-bad rule fixtures live.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .rules import RULES, Project, run_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="cometlint",
+        description="AST-based contract checks for the COMET serving "
+                    "core (rules R1-R6; see docs/invariants.md)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directory roots to scan")
+    ap.add_argument("--rules", default=None, metavar="R1,R4,...",
+                    help="run only this comma-separated subset")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings report")
+    args = ap.parse_args(argv)
+
+    only = None
+    if args.rules:
+        only = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = sorted(set(only) - set(RULES))
+        if unknown:
+            ap.error(f"unknown rule(s) {unknown}; have {sorted(RULES)}")
+
+    project = Project.from_paths(args.paths)
+    findings = run_rules(project, only=only)
+
+    if args.as_json:
+        print(json.dumps({
+            "files_scanned": len(project.files),
+            "rules": sorted(only or RULES),
+            "findings": [vars(f) for f in findings],
+            "skipped": [{"path": p, "error": str(e)}
+                        for p, e in project.skipped],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        for p, e in project.skipped:
+            print(f"{p}: skipped (syntax error: {e})", file=sys.stderr)
+        print(f"cometlint: {len(findings)} finding(s) in "
+              f"{len(project.files)} file(s) "
+              f"({len(only) if only else len(RULES)} rule(s))")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

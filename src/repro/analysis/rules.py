@@ -1,0 +1,571 @@
+"""Rule registry + the R1–R6 repo-contract rules for cometlint.
+
+Each rule is a function ``(Project) -> list[Finding]`` registered under a
+stable id. Rules are pure AST/source analyses — no imports of the code
+under scan — so the linter runs on a broken tree and in fixture
+sandboxes. The invariant each rule protects (and the historical bug that
+motivated it) is catalogued in ``docs/invariants.md``; keep the two in
+sync when adding a rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+__all__ = [
+    "Finding", "SourceFile", "Project", "RULES", "rule", "run_rules",
+    "SNAPSHOT_CONTRACTS", "HOST_ONLY_MODULES", "COUNTER_SUFFIXES",
+]
+
+# ---------------------------------------------------------------- project
+
+# deliberately-bad rule fixtures live under a directory literally named
+# "fixtures" — they must be loadable by Project.from_paths in tests but
+# must never leak into the repo-wide zero-findings gate
+SKIP_DIR_NAMES = {"fixtures", "__pycache__"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """One parsed python file: path (posix) for reporting, ``rel`` —
+    the path relative to the scan root's parent — for tree-layout
+    classification (so a fixture mini-tree under tests/analysis/fixtures
+    classifies by ITS OWN serving/ and tests/ directories, not by where
+    the fixture happens to live in the real repo)."""
+
+    def __init__(self, path: str, text: str, rel: Optional[str] = None):
+        self.path = path.replace(os.sep, "/")
+        self.rel = (rel or path).replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+
+    def line(self, lineno: int) -> str:
+        if 0 < lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    @property
+    def basename(self) -> str:
+        return self.path.rsplit("/", 1)[-1]
+
+    @property
+    def parts(self) -> tuple:
+        return tuple(self.rel.split("/"))
+
+
+class Project:
+    """The set of files one lint run sees. Cross-file rules (R3's
+    check-site/test-reference pairing, R5's serve-CLI surfacing) resolve
+    against this set only — hand ``from_sources`` a self-contained
+    mini-tree in fixtures."""
+
+    def __init__(self, files: list):
+        self.files = files
+        self.skipped: list = []     # (path, SyntaxError) — reported, not fatal
+
+    @classmethod
+    def from_paths(cls, roots: Iterable[str]) -> "Project":
+        files, skipped = [], []
+        for root in roots:
+            base = os.path.dirname(os.path.abspath(root.rstrip("/")))
+            if os.path.isfile(root):
+                paths = [root]
+            else:
+                paths = []
+                for dirpath, dirnames, filenames in os.walk(root):
+                    dirnames[:] = sorted(d for d in dirnames
+                                         if d not in SKIP_DIR_NAMES)
+                    paths.extend(os.path.join(dirpath, f)
+                                 for f in sorted(filenames)
+                                 if f.endswith(".py"))
+            for p in paths:
+                with open(p, "r", encoding="utf-8") as fh:
+                    text = fh.read()
+                rel = os.path.relpath(os.path.abspath(p), base)
+                try:
+                    files.append(SourceFile(p, text, rel=rel))
+                except SyntaxError as e:
+                    skipped.append((p, e))
+        proj = cls(files)
+        proj.skipped = skipped
+        return proj
+
+    @classmethod
+    def from_sources(cls, pairs: Iterable[tuple]) -> "Project":
+        return cls([SourceFile(path, text) for path, text in pairs])
+
+    def serving_sources(self) -> list:
+        """src-side serving modules (R3 instrumentation, R5 counters)."""
+        return [f for f in self.files
+                if "serving" in f.parts and "tests" not in f.parts]
+
+    def serving_tests(self) -> list:
+        return [f for f in self.files
+                if "serving" in f.parts and "tests" in f.parts]
+
+    def launch_sources(self) -> list:
+        """The serve-CLI layer — R5's 'surfaced in the summary' witness."""
+        return [f for f in self.files
+                if "launch" in f.parts and "tests" not in f.parts]
+
+
+# --------------------------------------------------------------- registry
+
+RULES: dict = {}
+
+
+def rule(rule_id: str, title: str) -> Callable:
+    def deco(fn):
+        fn.rule_id = rule_id
+        fn.title = title
+        RULES[rule_id] = fn
+        return fn
+    return deco
+
+
+def run_rules(project: Project,
+              only: Optional[Iterable[str]] = None) -> list:
+    wanted = set(only) if only else None
+    findings: list = []
+    for rid in sorted(RULES):
+        if wanted is not None and rid not in wanted:
+            continue
+        findings.extend(RULES[rid](project))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# ------------------------------------------------------------ AST helpers
+
+def _self_attr_target(node) -> Optional[str]:
+    """``self.X`` as an assignment target → ``X``."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _init_attrs(cls_node: ast.ClassDef) -> dict:
+    """Attrs assigned in ``__init__`` → first assignment line."""
+    attrs: dict = {}
+    for item in cls_node.body:
+        if isinstance(item, ast.FunctionDef) and item.name == "__init__":
+            for node in ast.walk(item):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                    targets = [node.target]
+                for t in targets:
+                    elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                        else [t]
+                    for elt in elts:
+                        name = _self_attr_target(elt)
+                        if name is not None and name not in attrs:
+                            attrs[name] = node.lineno
+    return attrs
+
+
+def _string_collection(node) -> Optional[set]:
+    """Evaluate a literal collection of strings: ``frozenset({...})``,
+    ``{...}``, ``(...)``, ``[...]``. None if anything is non-literal."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("frozenset", "set", "tuple", "list"):
+        if not node.args:
+            return set()
+        return _string_collection(node.args[0]) if len(node.args) == 1 \
+            else None
+    if isinstance(node, (ast.Set, ast.Tuple, ast.List)):
+        out = set()
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def _method(cls_node: ast.ClassDef, name: str):
+    for item in cls_node.body:
+        if isinstance(item, ast.FunctionDef) and item.name == name:
+            return item
+    return None
+
+
+def _name_tokens(nodes) -> set:
+    """Every identifier-ish token in the given ASTs: attribute names,
+    plain names, function args, and string constants (snapshot blobs key
+    state by name, so a dict key counts as coverage)."""
+    tokens: set = set()
+    for root in nodes:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Attribute):
+                tokens.add(node.attr)
+            elif isinstance(node, ast.Name):
+                tokens.add(node.id)
+            elif isinstance(node, ast.arg):
+                tokens.add(node.arg)
+            elif isinstance(node, ast.Constant) and isinstance(node.value,
+                                                              str):
+                tokens.add(node.value)
+    return tokens
+
+
+def _classes(f: SourceFile):
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+# ------------------------------------------------------- R1: snapshot
+
+# class name → the (snapshot, restore) method pair its attrs must reach
+SNAPSHOT_CONTRACTS = {
+    "Scheduler": ("snapshot", "restore"),
+    "PagedKV4Cache": ("snapshot_state", "restore_state"),
+    "Engine": ("snapshot", "restore"),
+}
+
+
+@rule("R1", "snapshot-completeness")
+def r1_snapshot_completeness(project: Project) -> list:
+    """Every mutable attr assigned in ``__init__`` of a snapshot-bearing
+    serving class must appear in its snapshot/restore pair or in the
+    class's explicit ``_SNAPSHOT_EXEMPT`` allowlist (and exempt names
+    must still exist — a stale allowlist entry is itself a finding)."""
+    findings = []
+    for f in project.files:
+        for cls in _classes(f):
+            contract = SNAPSHOT_CONTRACTS.get(cls.name)
+            if contract is None:
+                continue
+            methods = [m for m in (_method(cls, n) for n in contract) if m]
+            if not methods:
+                continue            # same-named helper class, no contract
+            attrs = _init_attrs(cls)
+            exempt: set = set()
+            for item in cls.body:
+                if (isinstance(item, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "_SNAPSHOT_EXEMPT"
+                                for t in item.targets)):
+                    vals = _string_collection(item.value)
+                    if vals is None:
+                        findings.append(Finding(
+                            "R1", f.path, item.lineno,
+                            f"{cls.name}._SNAPSHOT_EXEMPT must be a "
+                            "literal collection of attr-name strings"))
+                    else:
+                        exempt = vals
+            covered = _name_tokens(methods)
+            for name, lineno in sorted(attrs.items()):
+                if name in exempt:
+                    continue
+                if name in covered or name.lstrip("_") in covered:
+                    continue
+                findings.append(Finding(
+                    "R1", f.path, lineno,
+                    f"{cls.name}.{name} is assigned in __init__ but "
+                    f"reaches neither {'/'.join(contract)} nor "
+                    f"_SNAPSHOT_EXEMPT — a restore would silently drop "
+                    f"it"))
+            for name in sorted(exempt - set(attrs)):
+                findings.append(Finding(
+                    "R1", f.path, cls.lineno,
+                    f"{cls.name}._SNAPSHOT_EXEMPT lists {name!r} which "
+                    f"__init__ no longer assigns — stale allowlist "
+                    f"entry"))
+    return findings
+
+
+# ------------------------------------------------------ R2: jit argnums
+
+@rule("R2", "jit-argnum-hygiene")
+def r2_jit_argnum_hygiene(project: Project) -> list:
+    """``static_argnums``/``donate_argnums`` passed to a ``jit`` call
+    must not contain integer literals: positional indices silently shift
+    when a parameter is added, staticizing or donating the wrong buffer.
+    Derive them from parameter names (``serving.jit_args.argnums_of``
+    over a declared intent list)."""
+    findings = []
+    for f in project.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            is_jit = (isinstance(func, ast.Name) and func.id == "jit") or \
+                     (isinstance(func, ast.Attribute) and func.attr == "jit")
+            if not is_jit:
+                continue
+            for kw in node.keywords:
+                if kw.arg not in ("static_argnums", "donate_argnums"):
+                    continue
+                for sub in ast.walk(kw.value):
+                    if (isinstance(sub, ast.Constant)
+                            and isinstance(sub.value, int)
+                            and not isinstance(sub.value, bool)):
+                        findings.append(Finding(
+                            "R2", f.path, kw.value.lineno,
+                            f"integer literal in {kw.arg} — derive "
+                            f"indices from parameter names "
+                            f"(jit_args.argnums_of) so signature "
+                            f"changes fail loudly"))
+                        break
+    return findings
+
+
+# --------------------------------------------------- R3: fault coverage
+
+def _fault_points(project: Project):
+    """Evaluate FAULT_POINTS from serving/faults.py (handles the
+    ``ENGINE_FAULT_POINTS + (...)`` concat). None if faults.py is not in
+    this project (fixture sandboxes without it skip R3)."""
+    faults_file = None
+    for f in project.files:
+        if f.basename == "faults.py" and "serving" in f.parts:
+            faults_file = f
+            break
+    if faults_file is None:
+        return None, None
+
+    env: dict = {}
+
+    def ev(node):
+        if isinstance(node, ast.Tuple):
+            out = []
+            for elt in node.elts:
+                if not (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, str)):
+                    return None
+                out.append(elt.value)
+            return tuple(out)
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+            left, right = ev(node.left), ev(node.right)
+            if left is None or right is None:
+                return None
+            return left + right
+        if isinstance(node, ast.Name):
+            return env.get(node.id)
+        return None
+
+    for stmt in faults_file.tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id.endswith("FAULT_POINTS"):
+                    val = ev(stmt.value)
+                    if val is not None:
+                        env[t.id] = val
+    return faults_file, env.get("FAULT_POINTS")
+
+
+@rule("R3", "fault-point-coverage")
+def r3_fault_point_coverage(project: Project) -> list:
+    """Every declared fault point needs ≥1 live ``.check("<point>")``
+    instrumentation site in the serving sources and ≥1 reference in the
+    serving tests — an unexercised point is chaos coverage that silently
+    rotted."""
+    faults_file, points = _fault_points(project)
+    if faults_file is None:
+        return []
+    if points is None:
+        return [Finding("R3", faults_file.path, 1,
+                        "could not evaluate FAULT_POINTS as a literal "
+                        "tuple of strings")]
+    check_sites: dict = {p: 0 for p in points}
+    for f in project.serving_sources():
+        if f.basename == "faults.py":
+            continue
+        for node in ast.walk(f.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "check" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and node.args[0].value in check_sites):
+                check_sites[node.args[0].value] += 1
+    test_refs: dict = {p: 0 for p in points}
+    for f in project.serving_tests():
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                            str):
+                for p in points:
+                    if p in node.value:
+                        test_refs[p] += 1
+    findings = []
+    for p in points:
+        if check_sites[p] == 0:
+            findings.append(Finding(
+                "R3", faults_file.path, 1,
+                f"fault point {p!r} has no .check({p!r}) instrumentation "
+                f"site in the serving sources"))
+        if test_refs[p] == 0:
+            findings.append(Finding(
+                "R3", faults_file.path, 1,
+                f"fault point {p!r} is never referenced by the serving "
+                f"tests — its failure path is untested"))
+    return findings
+
+
+# ------------------------------------------------- R4: exception swallow
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _catches_broad(type_node) -> bool:
+    nodes = type_node.elts if isinstance(type_node, ast.Tuple) \
+        else [type_node]
+    for n in nodes:
+        if isinstance(n, ast.Name) and n.id in _BROAD:
+            return True
+        if isinstance(n, ast.Attribute) and n.attr in _BROAD:
+            return True
+    return False
+
+
+@rule("R4", "exception-swallow")
+def r4_exception_swallow(project: Project) -> list:
+    """Bare ``except:`` is always a finding. ``except Exception`` and
+    pass-only handlers need a ``# noqa: BLE001`` rationale on the except
+    line — the sanctioned serving-loop backstops carry one; anything
+    else is a swallowed failure waiting to corrupt state silently."""
+    findings = []
+    for f in project.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            sanctioned = "noqa: BLE001" in f.line(node.lineno)
+            if node.type is None:
+                findings.append(Finding(
+                    "R4", f.path, node.lineno,
+                    "bare except: — name the exception type (a bare "
+                    "except eats KeyboardInterrupt/SystemExit too)"))
+                continue
+            if _catches_broad(node.type) and not sanctioned:
+                findings.append(Finding(
+                    "R4", f.path, node.lineno,
+                    "except Exception without a '# noqa: BLE001' "
+                    "rationale — narrow the type or annotate why the "
+                    "backstop is sanctioned"))
+                continue
+            if (len(node.body) == 1 and isinstance(node.body[0], ast.Pass)
+                    and not sanctioned):
+                findings.append(Finding(
+                    "R4", f.path, node.lineno,
+                    "except-with-pass body silently swallows the "
+                    "failure — handle it, count it, or annotate a "
+                    "'# noqa: BLE001' rationale"))
+    return findings
+
+
+# ------------------------------------------------ R5: counter registry
+
+COUNTER_SUFFIXES = ("_count", "_counts", "_errors")
+
+# a counter is "surfaced" if it reaches one of these same-class reporting
+# methods, or the serve-CLI summary (any attribute/string mention under
+# launch/)
+_SURFACE_METHODS = ("counters", "snapshot", "snapshot_state", "summary",
+                    "stats")
+
+
+@rule("R5", "counter-registry-drift")
+def r5_counter_registry_drift(project: Project) -> list:
+    """Every ``self.*_count``-style counter incremented in serving/ must
+    be declared/reset in ``__init__`` and surfaced through the class's
+    own reporting methods or the serve-CLI summary — an unsurfaced
+    counter is observability that silently drifted out of the reports."""
+    launch_tokens: set = set()
+    for f in project.launch_sources():
+        launch_tokens |= _name_tokens([f.tree])
+    findings = []
+    for f in project.serving_sources():
+        for cls in _classes(f):
+            surface_nodes = [m for m in (_method(cls, n)
+                                         for n in _SURFACE_METHODS) if m]
+            surface_tokens = _name_tokens(surface_nodes)
+            init_names = set(_init_attrs(cls))
+            seen: set = set()
+            for node in ast.walk(cls):
+                if not (isinstance(node, ast.AugAssign)
+                        and isinstance(node.op, ast.Add)):
+                    continue
+                name = _self_attr_target(node.target)
+                if name is None or name in seen \
+                        or not name.endswith(COUNTER_SUFFIXES):
+                    continue
+                seen.add(name)
+                if name not in init_names:
+                    findings.append(Finding(
+                        "R5", f.path, node.lineno,
+                        f"counter {cls.name}.{name} is incremented but "
+                        f"never declared/reset in __init__"))
+                    continue
+                if name not in surface_tokens and name not in launch_tokens:
+                    findings.append(Finding(
+                        "R5", f.path, node.lineno,
+                        f"counter {cls.name}.{name} is never surfaced — "
+                        f"add it to {cls.name}.counters()/snapshot or "
+                        f"the serve-CLI summary"))
+    return findings
+
+
+# ---------------------------------------------- R6: host/device boundary
+
+# serving modules that must stay pure-host: they run inside the step's
+# failure-isolation boundary and in restore paths where no device (or a
+# different device topology) is present
+HOST_ONLY_MODULES = ("scheduler.py", "faults.py", "recovery.py")
+
+
+@rule("R6", "host-device-boundary")
+def r6_host_device_boundary(project: Project) -> list:
+    """No jax/jnp in the host-only serving modules, and no builtin
+    ``hash()`` anywhere — per-process hash seeding makes it
+    irreproducible across restarts and it is forgeable (the prefix cache
+    keys KV pages by content; a collision would serve another prompt's
+    KV). Use hashlib digests."""
+    findings = []
+    for f in project.files:
+        host_only = f.basename in HOST_ONLY_MODULES and "serving" in f.parts
+        for node in ast.walk(f.tree):
+            if host_only and isinstance(node, (ast.Import, ast.ImportFrom)):
+                mods = [a.name for a in node.names] \
+                    if isinstance(node, ast.Import) \
+                    else [node.module or ""]
+                for m in mods:
+                    if m == "jax" or m.startswith("jax."):
+                        findings.append(Finding(
+                            "R6", f.path, node.lineno,
+                            f"host-only module imports {m!r} — device "
+                            f"work belongs in engine/kv_cache, behind "
+                            f"the step isolation boundary"))
+            if host_only and isinstance(node, ast.Name) \
+                    and node.id in ("jnp", "jax") \
+                    and isinstance(node.ctx, ast.Load):
+                findings.append(Finding(
+                    "R6", f.path, node.lineno,
+                    f"host-only module uses {node.id!r} — no device "
+                    f"array ops in {f.basename}"))
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "hash"):
+                findings.append(Finding(
+                    "R6", f.path, node.lineno,
+                    "builtin hash() is process-seeded and forgeable — "
+                    "key content with hashlib (see "
+                    "PagedKV4Cache._page_keys)"))
+    return findings

@@ -76,7 +76,8 @@ def _group_ecfg(args) -> EngineConfig:
         prefix_cache=(args.prefix_cache == "on"),
         attention_schedule=args.attention_schedule,
         prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None),
-        max_waiting=(args.max_waiting or None))
+        max_waiting=(args.max_waiting or None),
+        sanitize=args.sanitize)
 
 
 def _run_group(args, cfg, qparams, qaxes, quant, model: int):
@@ -161,7 +162,8 @@ def _run_group(args, cfg, qparams, qaxes, quant, model: int):
           f"{sum(r.engine.timeout_count for r in live)} shed="
           f"{sum(r.engine.shed_count for r in live)} rejected="
           f"{sum(r.engine.rejected_count for r in live)} "
-          f"internal_errors={c['internal_errors']}", flush=True)
+          f"internal_errors={c['internal_errors']} sanitize_checks="
+          f"{sum(r.engine.sanitize_checks for r in live)}", flush=True)
     for rep in group.replicas:
         if rep.engine.faults.fired:
             fired = [f"{p}:{a}@step{s}"
@@ -238,6 +240,12 @@ def main():
                     help="deterministic fault schedule (serving/faults.py "
                          "grammar), e.g. 'forward:step=3,action=nan;"
                          "alloc_page:nth=20' — chaos-tests step isolation")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the step-boundary runtime sanitizers "
+                         "(serving/sanitize.py): page-refcount "
+                         "conservation + event-contract checks after "
+                         "every step; SanitizerError aborts the run "
+                         "the moment an invariant breaks")
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="journaled crash recovery: full engine snapshot "
                          "every N steps + per-token event journal "
@@ -321,7 +329,8 @@ def main():
         attention_schedule=args.attention_schedule,
         prefix_cache_max_bytes=(args.prefix_cache_max_bytes or None),
         max_waiting=(args.max_waiting or None),
-        inject_faults=(args.inject_faults or None)),
+        inject_faults=(args.inject_faults or None),
+        sanitize=args.sanitize),
         mesh=mesh, param_axes=qaxes)
     log = None
     if args.snapshot_every:
@@ -397,6 +406,7 @@ def main():
           f"shed={eng.shed_count} rejected={eng.rejected_count} "
           f"callback_errors={eng.callback_errors} "
           f"internal_errors={eng.internal_errors} "
+          f"sanitize_checks={eng.sanitize_checks} "
           f"released={eng.sched.released_count}", flush=True)
     if eng.faults.faults:
         fired = [f"{p}:{a}@step{s}" for p, a, s in eng.faults.fired]

@@ -29,6 +29,7 @@ from repro.data.pipeline import DataConfig, SyntheticLMData
 from repro.launch.mesh import make_local_mesh
 from repro.models.lm import LM
 from repro.parallel import sharding as SH
+from repro.serving.jit_args import argnums_of
 from repro.training import checkpoint as CKPT
 from repro.training import optimizer as OPT
 from repro.training.train_loop import make_train_step
@@ -83,7 +84,8 @@ def main():
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, seed=args.seed))
 
-    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    jit_step = jax.jit(step_fn, donate_argnums=argnums_of(
+        step_fn, "params", "opt_state"))
     durations = []
     with mesh:
         for step in range(start_step, args.steps):

@@ -41,20 +41,26 @@ __all__ = [
 
 
 def _ambient_mesh():
-    """The mesh from either jax.set_mesh or the legacy ``with mesh:``."""
+    """The mesh from either jax.set_mesh or the legacy ``with mesh:``.
+
+    Both probes reach into version-dependent jax surfaces, so each is
+    narrowed to the exact failure its jax version produces — a missing
+    accessor (older/newer jax) degrades to the next probe; anything
+    else is a real bug and propagates."""
     try:
         m = jax.sharding.get_abstract_mesh()
-        if not m.empty:
-            return m
-    except Exception:
-        pass
+    except AttributeError:      # jax < get_abstract_mesh
+        m = None
+    if m is not None and not m.empty:
+        return m
     try:
         from jax._src.mesh import thread_resources
-        pm = thread_resources.env.physical_mesh
-        if pm is not None and not pm.empty:
-            return pm
-    except Exception:
-        pass
+    except ImportError:         # private module moved/removed
+        return None
+    pm = getattr(getattr(thread_resources, "env", None),
+                 "physical_mesh", None)
+    if pm is not None and not pm.empty:
+        return pm
     return None
 
 

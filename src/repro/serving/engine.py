@@ -176,7 +176,9 @@ from repro.serving import kv_cache as KVC
 from repro.serving.api import (RequestHandle, RequestOutput, RequestState,
                                SamplingParams)
 from repro.serving.faults import FaultInjector, InjectedFault
+from repro.serving.jit_args import argnums_of
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
+from repro.serving.sanitize import check_engine
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "EngineConfig", "SamplingParams", "RequestState",
@@ -271,6 +273,14 @@ class EngineConfig:
     inject_faults: Optional[str] = None  # fault schedule spec
     #                                  (serving/faults.py grammar), e.g.
     #                                  "forward:step=3,action=nan"
+    sanitize: bool = False          # re-derive the core invariants
+    #                                  (page-refcount conservation,
+    #                                  exactly-one-terminal, no-token-
+    #                                  after-terminal) after EVERY step
+    #                                  and raise SanitizerError on the
+    #                                  first violation — the runtime
+    #                                  half of repro.analysis.cometlint
+    #                                  (serving/sanitize.py)
 
     def __post_init__(self):
         if self.max_waiting is not None and self.max_waiting < 1:
@@ -305,6 +315,35 @@ class EngineConfig:
 
 
 class Engine:
+    # declared jit intent (rule R2): which _unified_forward parameters
+    # are static (shape-bucket keys traced per value) and which are
+    # donated (pool buffers updated in place). Indices are derived from
+    # these NAMES at construction via jit_args.argnums_of, so adding or
+    # reordering a forward parameter re-resolves correctly and renaming
+    # one fails loudly instead of staticizing/donating the wrong arg.
+    _FWD_STATIC_ARGS = ("cmax", "no_history", "schedule")
+    _FWD_DONATE_ARGS = ("k_pool", "v_pool")
+
+    # rule R1 (snapshot-completeness) allowlist: __init__ attrs that are
+    # deliberately NOT in the full-snapshot blob — rebuilt by the
+    # constructor (model/params/jit caches/sharding layouts) or
+    # process-lifetime observability counters a restored incarnation
+    # starts from zero (the serve CLI reports them per process).
+    _SNAPSHOT_EXEMPT = frozenset({
+        # rebuilt by __init__ / only meaningful in-process
+        "lm", "params", "donate_pools", "_fwd", "_fwd_shapes",
+        "_sample_fns", "_gather_bcast", "_param_pspecs", "_scale_pspec",
+        "_events",
+        # per-process observability counters
+        "peak_prefill_fp_tokens", "interleaved_steps", "forward_calls",
+        "trace_count", "prefix_hit_tokens", "prefill_tokens",
+        "aborted_count", "failed_count", "timeout_count", "shed_count",
+        "rejected_count", "callback_errors", "internal_errors",
+        "last_error", "sanitize_checks", "attn_work_items",
+        "attn_grid_items", "attn_dense_grid_items", "attn_forwards",
+        "attn_work_items_per_shard",
+    })
+
     def __init__(self, cfg: ModelConfig, qparams, quant: QuantConfig,
                  ecfg: EngineConfig = EngineConfig(), *,
                  mesh=None, param_axes=None, faults=None, clock=time.time):
@@ -383,6 +422,8 @@ class Engine:
         self.callback_errors = 0
         self.internal_errors = 0
         self.last_error: Optional[str] = None
+        # step boundaries that passed the runtime sanitizer (ecfg.sanitize)
+        self.sanitize_checks = 0
         # attention-schedule counters (fig10 measured ablation): real
         # work items (Σ real pages + chunk items, per kv head — equal
         # under both schedules), grid items actually launched (dense:
@@ -412,8 +453,12 @@ class Engine:
         if self.tp_size > 1:
             self._init_sharding(param_axes)
         self._fwd = jax.jit(
-            self._unified_forward, static_argnums=(0, 1, 2),
-            donate_argnums=(4, 5) if self.donate_pools else ())
+            self._unified_forward,
+            static_argnums=argnums_of(self._unified_forward,
+                                      *self._FWD_STATIC_ARGS),
+            donate_argnums=(argnums_of(self._unified_forward,
+                                       *self._FWD_DONATE_ARGS)
+                            if self.donate_pools else ()))
         self._sample_fns: dict = {}        # kmax → jitted batched sampler
         self._by_id: dict[int, Request] = {}
         self._next_id = 0
@@ -718,7 +763,9 @@ class Engine:
                     raise InjectedFault(
                         "emit_event: injected callback failure")
                 req.on_event(out)
-            except Exception:
+            except Exception:  # noqa: BLE001 — user-callback boundary:
+                # client code may raise anything; detach + count it so
+                # one bad callback can't poison the serving loop
                 self.callback_errors += 1
                 req.on_event = None
 
@@ -771,7 +818,12 @@ class Engine:
         NEVER raises: per-request failures are quarantined inside
         (``_forward_step``'s guards), and anything unexpected that still
         escapes is swallowed into ``internal_errors``/``last_error`` —
-        one poisoned step must not take down the serving loop."""
+        one poisoned step must not take down the serving loop.
+
+        Exception: ``ecfg.sanitize`` runs the step-boundary invariant
+        checks (serving/sanitize.py) OUTSIDE the backstop — a
+        ``SanitizerError`` means engine state is already corrupt, and
+        the whole point is to stop before serving wrong answers."""
         self.steps += 1
         self.faults.begin_step(self.steps)
         try:
@@ -779,6 +831,9 @@ class Engine:
         except Exception as e:  # noqa: BLE001 — the serving-loop backstop
             self.internal_errors += 1
             self.last_error = repr(e)
+        if self.ecfg.sanitize:
+            check_engine(self)
+            self.sanitize_checks += 1
 
     def _step_inner(self):
         # deadline/TTFT expiry runs BEFORE admission: a dead-on-arrival

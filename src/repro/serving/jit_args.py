@@ -1,0 +1,46 @@
+"""Name-derived ``static_argnums``/``donate_argnums`` for ``jax.jit``.
+
+Integer argnum literals are positional landmines: adding a parameter to
+the jitted callable silently shifts which argument gets staticized (a
+retrace storm) or donated (a use-after-donate on the wrong buffer) — the
+engine's forward has already been bitten once by exactly this. Rule R2
+(``repro.analysis.cometlint``) bans the literals; this helper is the
+sanctioned replacement: callers declare INTENT as parameter names and
+the indices are derived from the live signature, so a rename or
+reorder either resolves correctly or fails loudly at construction.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+__all__ = ["argnums_of"]
+
+
+def argnums_of(fn, *names: str) -> tuple:
+    """Positional indices of ``names`` in ``fn``'s signature.
+
+    ``fn`` may be a plain function or a bound method (``self`` is then
+    already excluded by ``inspect.signature``). Raises ``ValueError``
+    naming the missing parameter(s) if the signature no longer carries
+    one of the declared names, and rejects keyword-only parameters —
+    they have no positional index for jit to consume.
+    """
+    params = list(inspect.signature(fn).parameters.values())
+    by_name = {p.name: i for i, p in enumerate(params)}
+    missing = [n for n in names if n not in by_name]
+    if missing:
+        raise ValueError(
+            f"argnums_of: {getattr(fn, '__qualname__', fn)!r} has no "
+            f"parameter(s) {missing}; signature is "
+            f"({', '.join(p.name for p in params)}) — update the "
+            f"declared intent list to match the renamed/removed "
+            f"parameter")
+    kw_only = [n for n in names
+               if params[by_name[n]].kind == inspect.Parameter.KEYWORD_ONLY]
+    if kw_only:
+        raise ValueError(
+            f"argnums_of: parameter(s) {kw_only} of "
+            f"{getattr(fn, '__qualname__', fn)!r} are keyword-only and "
+            f"have no positional argnum")
+    return tuple(by_name[n] for n in names)

@@ -219,6 +219,15 @@ class PagedKV4Cache:
     pool arrays.
     """
 
+    # rule R1 (snapshot-completeness) allowlist: constructor-derived
+    # config/calibration state the restore path rebuilds from the same
+    # ctor args (scales/zeros are pure functions of cfg + kv_range), and
+    # the engine-injected fault harness, which never crosses a snapshot.
+    _SNAPSHOT_EXEMPT = frozenset({
+        "cfg", "pcfg", "k_scale", "k_zero", "v_scale", "v_zero",
+        "page_bytes", "faults",
+    })
+
     def __init__(self, cfg: ModelConfig, pcfg: PagedKV4Config,
                  num_layer_slots: int,
                  k_stats=None, v_stats=None, kv_range: float = 16.0):

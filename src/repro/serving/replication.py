@@ -288,7 +288,9 @@ class ReplicaGroup:
         if cb is not None:
             try:
                 cb(ev)
-            except Exception:
+            except Exception:  # noqa: BLE001 — client-callback boundary:
+                # group-level mirror of Engine._emit's guard — client
+                # code may raise anything; detach + count, never fatal
                 self.callback_errors += 1
                 self._callbacks.pop(rid, None)
 
@@ -411,6 +413,7 @@ class ReplicaGroup:
             "migrated_requests": self.migrated_requests,
             "replica_steps": self.replica_steps,
             "duplicates_suppressed": self.duplicates_suppressed,
+            "callback_errors": self.callback_errors,
             "internal_errors": self.internal_errors,
             "health": self.health,
         }

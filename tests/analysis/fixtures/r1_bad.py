@@ -1,0 +1,24 @@
+"""R1 true positive: ``dropped`` never reaches snapshot/restore or the
+allowlist, and the allowlist carries a stale name."""
+
+
+class Scheduler:
+    def __init__(self):
+        self.waiting = []
+        self.dropped = 0            # R1: not snapshotted, not exempt
+
+    def snapshot(self):
+        return {"waiting": self.waiting}
+
+    def restore(self, state):
+        self.waiting = state["waiting"]
+
+
+class Engine:
+    _SNAPSHOT_EXEMPT = frozenset({"ghost"})   # R1: stale — never assigned
+
+    def __init__(self):
+        self.steps = 0
+
+    def snapshot(self):
+        return {"steps": self.steps}

@@ -1,0 +1,22 @@
+"""R1 true negative: every __init__ attr is snapshotted (directly, by
+dict key, or via the underscore-stripped name) or explicitly exempt."""
+
+
+class Scheduler:
+    _SNAPSHOT_EXEMPT = frozenset({"scratch"})
+
+    def __init__(self, limit):
+        self.limit = limit
+        self.waiting = []
+        self._cursor = 0
+        self.scratch = {}           # exempt: rebuilt per step
+
+    def snapshot(self):
+        return {"waiting": self.waiting, "cursor": self._cursor}
+
+    @classmethod
+    def restore(cls, state, limit):
+        sched = cls(limit)
+        sched.waiting = state["waiting"]
+        sched._cursor = state["cursor"]
+        return sched

@@ -1,0 +1,10 @@
+"""R2 true negative: argnums derived from parameter names."""
+
+STATIC = ("cmax", "schedule")
+DONATE = ("k_pool", "v_pool")
+
+
+def build(jax, argnums_of, fwd, donate):
+    return jax.jit(fwd, static_argnums=argnums_of(fwd, *STATIC),
+                   donate_argnums=(argnums_of(fwd, *DONATE)
+                                   if donate else ()))

@@ -1,0 +1,4 @@
+def step(faults):
+    if faults.check("covered"):
+        return None
+    return 1

@@ -1,0 +1,5 @@
+"""R3 true positive: ``ghost`` is declared but has no instrumentation
+site and no test reference (two findings)."""
+
+ENGINE_FAULT_POINTS = ("covered",)
+FAULT_POINTS = ENGINE_FAULT_POINTS + ("ghost",)

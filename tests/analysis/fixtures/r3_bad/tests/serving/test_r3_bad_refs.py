@@ -1,0 +1,2 @@
+def test_covered_fault():
+    assert "covered" in ("covered",)

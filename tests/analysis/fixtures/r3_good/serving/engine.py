@@ -1,0 +1,8 @@
+def step(faults):
+    if faults.check("forward"):
+        return None
+    if faults.check("sample"):
+        return None
+    if faults.check("crash"):
+        raise SystemExit(1)
+    return 1

@@ -1,0 +1,4 @@
+"""R3 true negative: every declared point is instrumented and tested."""
+
+ENGINE_FAULT_POINTS = ("forward", "sample")
+FAULT_POINTS = ENGINE_FAULT_POINTS + ("crash",)

@@ -1,0 +1,3 @@
+def test_all_points():
+    spec = "forward:step=3;sample:step=4;crash:step=5"
+    assert "forward" in spec

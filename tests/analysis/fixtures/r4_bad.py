@@ -1,0 +1,18 @@
+"""R4 true positives: bare except, unannotated broad catch, and a
+typed-but-pass-only swallow."""
+
+
+def f(op):
+    try:
+        op()
+    except:                         # bare — finding, never sanctionable
+        return None
+    try:
+        op()
+    except Exception:               # broad without a rationale — finding
+        return None
+    try:
+        op()
+    except ValueError:              # pass-only swallow — finding
+        pass
+    return 1

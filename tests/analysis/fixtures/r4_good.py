@@ -1,0 +1,14 @@
+"""R4 true negatives: typed-and-handled, and the sanctioned annotated
+backstop."""
+
+
+def f(op, log):
+    try:
+        op()
+    except ValueError as e:
+        log(e)
+    try:
+        op()
+    except Exception as e:  # noqa: BLE001 — serving-loop backstop: count
+        log(e)
+    return 1

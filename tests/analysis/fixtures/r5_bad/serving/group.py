@@ -1,0 +1,17 @@
+"""R5 true positives: ``oops_count`` is incremented but never declared;
+``hidden_errors`` is declared but surfaced nowhere."""
+
+
+class Group:
+    def __init__(self):
+        self.hidden_errors = 0
+
+    def deliver(self, cb, ev):
+        try:
+            cb(ev)
+        except ValueError:
+            self.hidden_errors += 1
+            self.oops_count += 1
+
+    def counters(self):
+        return {"steps": 0}

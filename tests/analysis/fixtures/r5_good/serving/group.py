@@ -1,0 +1,15 @@
+"""R5 true negative: declared in __init__ and surfaced in counters()."""
+
+
+class Group:
+    def __init__(self):
+        self.callback_errors = 0
+
+    def deliver(self, cb, ev):
+        try:
+            cb(ev)
+        except ValueError:
+            self.callback_errors += 1
+
+    def counters(self):
+        return {"callback_errors": self.callback_errors}

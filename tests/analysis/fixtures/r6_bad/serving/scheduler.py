@@ -1,0 +1,10 @@
+"""R6 true positives: device imports/usage in a host-only module and a
+builtin hash() on prompt content."""
+
+import jax
+import jax.numpy as jnp
+
+
+def plan(prompt):
+    key = hash(tuple(prompt))
+    return jnp.zeros((len(prompt),)), key

@@ -1,0 +1,8 @@
+"""R6 true negative: pure-host scheduling with hashlib content keys."""
+
+import hashlib
+
+
+def plan(prompt):
+    key = hashlib.sha256(bytes(prompt)).digest()
+    return [0] * len(prompt), key

@@ -1,0 +1,159 @@
+"""cometlint rule tests: each of R1–R6 gets a true-positive fixture (a
+seeded bad snippet must produce the finding) and a true-negative fixture
+(the compliant sibling must stay silent), plus the repo-wide
+zero-findings gate — the same invocation CI's ``lint-cpu`` job runs.
+
+Fixtures live under ``fixtures/`` which ``Project.from_paths`` never
+descends into — the deliberately-bad snippets must not fail the gate.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.cometlint import main
+from repro.analysis.rules import Project, RULES, run_rules
+
+HERE = pathlib.Path(__file__).resolve().parent
+FIX = HERE / "fixtures"
+REPO = HERE.parents[1]
+
+
+def findings_for(rule_id, *paths):
+    project = Project.from_paths([str(p) for p in paths])
+    assert project.files, f"fixture scan found no files in {paths}"
+    return run_rules(project, only=[rule_id])
+
+
+# ------------------------------------------------------------ per rule
+
+def test_r1_true_positive():
+    found = findings_for("R1", FIX / "r1_bad.py")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "Scheduler.dropped" in msgs          # uncovered attr
+    assert "ghost" in msgs and "stale" in msgs  # stale allowlist entry
+
+
+def test_r1_true_negative():
+    assert findings_for("R1", FIX / "r1_good.py") == []
+
+
+def test_r2_true_positive():
+    found = findings_for("R2", FIX / "r2_bad.py")
+    assert len(found) == 2                      # static + donate kwargs
+    assert all(f.rule == "R2" for f in found)
+
+
+def test_r2_true_negative():
+    assert findings_for("R2", FIX / "r2_good.py") == []
+
+
+def test_r3_true_positive():
+    found = findings_for("R3", FIX / "r3_bad")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2                      # no check site, no test ref
+    assert "'ghost'" in msgs and "instrumentation" in msgs
+    assert "never referenced" in msgs
+
+
+def test_r3_true_negative():
+    assert findings_for("R3", FIX / "r3_good") == []
+
+
+def test_r4_true_positive():
+    found = findings_for("R4", FIX / "r4_bad.py")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 3
+    assert "bare except" in msgs
+    assert "noqa: BLE001" in msgs
+    assert "pass" in msgs
+
+
+def test_r4_true_negative():
+    assert findings_for("R4", FIX / "r4_good.py") == []
+
+
+def test_r5_true_positive():
+    found = findings_for("R5", FIX / "r5_bad")
+    msgs = " | ".join(f.message for f in found)
+    assert len(found) == 2
+    assert "oops_count" in msgs and "never declared" in msgs
+    assert "hidden_errors" in msgs and "never surfaced" in msgs
+
+
+def test_r5_true_negative():
+    assert findings_for("R5", FIX / "r5_good") == []
+
+
+def test_r6_true_positive():
+    found = findings_for("R6", FIX / "r6_bad")
+    msgs = " | ".join(f.message for f in found)
+    assert "imports 'jax'" in msgs              # device import
+    assert "hash()" in msgs                     # builtin hash on content
+    assert any("jnp" in f.message for f in found)
+
+
+def test_r6_true_negative():
+    assert findings_for("R6", FIX / "r6_good") == []
+
+
+# ------------------------------------------------------------ the gate
+
+def test_repo_zero_findings_gate():
+    """The exact CI gate: cometlint over src/ + tests/ must be clean."""
+    project = Project.from_paths([str(REPO / "src"), str(REPO / "tests")])
+    found = run_rules(project)
+    assert found == [], "\n".join(f.format() for f in found)
+
+
+def test_fixtures_excluded_from_scans():
+    """Directories named ``fixtures`` never leak into a directory scan —
+    the bad snippets above must not fail the repo gate."""
+    project = Project.from_paths([str(HERE)])
+    names = {f.basename for f in project.files}
+    assert "test_cometlint.py" in names
+    assert not any("r1_bad" in f.path or "r6_bad" in f.path
+                   for f in project.files)
+
+
+# ------------------------------------------------------------- the CLI
+
+def test_cli_exit_codes(capsys):
+    assert main([str(FIX / "r4_good.py")]) == 0
+    assert main([str(FIX / "r4_bad.py")]) == 1
+    out = capsys.readouterr().out
+    assert "[R4]" in out and "finding(s)" in out
+
+
+def test_cli_rule_subset(capsys):
+    # r4_bad has only R4 findings; restricting to R1 must be clean
+    assert main(["--rules", "R1", str(FIX / "r4_bad.py")]) == 0
+    capsys.readouterr()
+
+
+def test_cli_unknown_rule_rejected(capsys):
+    with pytest.raises(SystemExit):
+        main(["--rules", "R99", str(FIX / "r4_bad.py")])
+    capsys.readouterr()
+
+
+def test_cli_json_report(capsys):
+    assert main(["--json", str(FIX / "r2_bad.py")]) == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["files_scanned"] == 1
+    assert {f["rule"] for f in report["findings"]} == {"R2"}
+    assert all({"rule", "path", "line", "message"} <= set(f)
+               for f in report["findings"])
+
+
+def test_registry_is_complete():
+    assert sorted(RULES) == ["R1", "R2", "R3", "R4", "R5", "R6"]
+
+
+def test_from_sources_matches_from_paths():
+    """In-memory projects (how future rule tests can seed multi-file
+    trees without fixture dirs) behave like disk scans."""
+    text = (FIX / "r2_bad.py").read_text()
+    proj = Project.from_sources([("src/repro/serving/x.py", text)])
+    assert len(run_rules(proj, only=["R2"])) == 2

@@ -45,9 +45,13 @@ def setup():
 
 def make_engine(setup, faults=None, clock=None, **kw):
     cfg, qc, qparams = setup
+    # sanitize=True: every seeded fault schedule also runs the
+    # step-boundary runtime sanitizers (serving/sanitize.py) — a chaos
+    # case that corrupted refcounts or duplicated a terminal would now
+    # raise SanitizerError out of step() instead of passing silently
     defaults = dict(max_batch=4, num_pages=64, page_size=8,
                     max_pages_per_seq=16, prefill_chunk_tokens=24,
-                    kv_range=4.0)
+                    kv_range=4.0, sanitize=True)
     defaults.update(kw)
     ekw = {}
     if faults is not None:

@@ -1,0 +1,84 @@
+"""Name-derived jit argnums (rule R2's runtime helper).
+
+The contract under test: the engine declares its static/donate intent as
+parameter NAMES (``Engine._FWD_STATIC_ARGS``/``_FWD_DONATE_ARGS``) and
+``argnums_of`` resolves them against the live signature — so reordering
+or inserting a forward parameter re-derives the right indices, and
+renaming a declared one fails loudly at construction instead of
+silently staticizing/donating the wrong argument.
+"""
+import inspect
+
+import pytest
+
+from repro.serving.engine import Engine
+from repro.serving.jit_args import argnums_of
+
+
+def test_basic_resolution():
+    def fwd(cmax, no_history, schedule, params, k_pool, v_pool):
+        pass
+    assert argnums_of(fwd, "cmax", "no_history", "schedule") == (0, 1, 2)
+    assert argnums_of(fwd, "k_pool", "v_pool") == (4, 5)
+    assert argnums_of(fwd) == ()
+
+
+def test_reorder_and_insertion_track_the_signature():
+    # the exact failure mode that motivated R2: a new parameter shifts
+    # every literal index; names re-derive correctly
+    def before(cmax, params, k_pool, v_pool):
+        pass
+
+    def after(cmax, new_schedule_arg, params, k_pool, v_pool):
+        pass
+    assert argnums_of(before, "k_pool", "v_pool") == (2, 3)
+    assert argnums_of(after, "k_pool", "v_pool") == (3, 4)
+
+
+def test_rename_fails_loudly():
+    def renamed(cmax, nohist, schedule, params, k_pool, v_pool):
+        pass
+    with pytest.raises(ValueError, match="no_history"):
+        argnums_of(renamed, *Engine._FWD_STATIC_ARGS)
+
+
+def test_removed_parameter_fails_loudly():
+    def fwd(cmax, schedule):
+        pass
+    with pytest.raises(ValueError, match=r"\['k_pool', 'v_pool'\]"):
+        argnums_of(fwd, "k_pool", "v_pool")
+
+
+def test_keyword_only_rejected():
+    def fwd(a, b, *, donate_me):
+        pass
+    with pytest.raises(ValueError, match="keyword-only"):
+        argnums_of(fwd, "donate_me")
+
+
+def test_bound_method_excludes_self():
+    class C:
+        def fwd(self, cmax, k_pool):
+            pass
+    assert argnums_of(C().fwd, "cmax", "k_pool") == (0, 1)
+    assert argnums_of(C.fwd, "cmax", "k_pool") == (1, 2)
+
+
+def test_engine_declared_intent_matches_unified_forward():
+    """Every declared static/donate name must exist in the real forward
+    signature — this is the test that fails when someone renames a
+    ``_unified_forward`` parameter without updating the intent lists."""
+    sig = inspect.signature(Engine._unified_forward)
+    for name in (*Engine._FWD_STATIC_ARGS, *Engine._FWD_DONATE_ARGS):
+        assert name in sig.parameters, (
+            f"Engine._unified_forward lost declared jit-intent "
+            f"parameter {name!r}")
+    # unbound function includes self at 0; the engine jits the BOUND
+    # method, so construction-time indices are these minus one — pin
+    # the historical layout (static 0,1,2 / donate 4,5) so an
+    # accidental reorder of the static/donated args is reviewed, not
+    # silent
+    static = argnums_of(Engine._unified_forward, *Engine._FWD_STATIC_ARGS)
+    donate = argnums_of(Engine._unified_forward, *Engine._FWD_DONATE_ARGS)
+    assert static == (1, 2, 3)
+    assert donate == (5, 6)

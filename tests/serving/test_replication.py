@@ -23,7 +23,10 @@ from repro.serving.replication import ReplicaGroup
 # small chunk so prefill spans several steps — a step-2 kill lands
 # genuinely mid-prefill
 ECFG = dict(max_batch=4, num_pages=64, page_size=8, max_pages_per_seq=16,
-            prefill_chunk_tokens=8, kv_range=4.0)
+            prefill_chunk_tokens=8, kv_range=4.0,
+            # every replica engine (and every failover-resumed one — the
+            # ecfg is shared) runs the step-boundary runtime sanitizers
+            sanitize=True)
 SNAP = 4                        # checkpoint cadence: gap kills at 6/7
 MAX_NEW = 6
 

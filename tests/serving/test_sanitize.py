@@ -1,0 +1,147 @@
+"""Step-boundary runtime sanitizer tests (EngineConfig.sanitize).
+
+The checks must be LIVE, not vacuous: each case deliberately corrupts an
+invariant the serving core guarantees — a page refcount, the exactly-
+one-terminal event contract — and asserts ``sanitize=True`` raises
+``SanitizerError`` NAMING the violated invariant on the very next
+``step()``, while an identically-corrupted ``sanitize=False`` engine
+steps on silently (the production default trades the check for a few µs
+of host work per step).
+"""
+import jax
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.sanitize import SanitizerError, check_cache, check_events
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, sanitize=True, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(max_batch=4, num_pages=64, page_size=8,
+                    max_pages_per_seq=16, prefill_chunk_tokens=24,
+                    kv_range=4.0, sanitize=sanitize)
+    defaults.update(kw)
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults))
+
+
+def submit(eng, n=2, plen=12, max_new=4):
+    sp = SamplingParams(max_new_tokens=max_new)
+    return [eng.submit(list(range(3, 3 + plen)), sp) for _ in range(n)]
+
+
+def mapped_page(eng) -> int:
+    """A physical page some active sequence currently maps."""
+    sid = next(iter(eng.cache.active))
+    return int(eng.cache.block_table[sid, 0])
+
+
+# ----------------------------------------------------- corrupted refcount
+
+def test_refcount_corruption_raises(setup):
+    eng = make_engine(setup)
+    submit(eng)
+    eng.step()                                  # maps prompt pages
+    eng.cache.ref[mapped_page(eng)] += 1        # the deliberate corruption
+    with pytest.raises(SanitizerError, match="page-refcount conservation"):
+        eng.step()
+
+
+def test_refcount_corruption_silent_when_off(setup):
+    eng = make_engine(setup, sanitize=False)
+    submit(eng)
+    eng.step()
+    eng.cache.ref[mapped_page(eng)] += 1
+    eng.step()                                  # same corruption: no raise
+    assert eng.internal_errors == 0             # and not via the backstop
+    assert eng.sanitize_checks == 0
+
+
+def test_freelist_double_entry_raises(setup):
+    eng = make_engine(setup)
+    submit(eng)
+    eng.step()
+    eng.cache.free_pages.append(mapped_page(eng))   # free a mapped page
+    with pytest.raises(SanitizerError, match="page-refcount conservation"):
+        eng.step()
+
+
+# ------------------------------------------------------- double terminal
+
+def test_double_terminal_raises(setup):
+    eng = make_engine(setup)
+    handles = submit(eng, max_new=2)
+    while eng.sched.has_work:
+        eng.step()
+    req = eng._by_id[handles[0].request_id]
+    assert req.terminal_emitted
+    req.terminal_emitted = False                # defeat the _emit guard
+    eng._emit(req)                              # the duplicated terminal
+    with pytest.raises(SanitizerError, match="exactly-one-terminal"):
+        eng.step()
+
+
+def test_double_terminal_silent_when_off(setup):
+    eng = make_engine(setup, sanitize=False)
+    handles = submit(eng, max_new=2)
+    while eng.sched.has_work:
+        eng.step()
+    req = eng._by_id[handles[0].request_id]
+    req.terminal_emitted = False
+    eng._emit(req)
+    eng.step()                                  # no raise
+    assert eng.internal_errors == 0
+
+
+def test_token_after_terminal_raises(setup):
+    eng = make_engine(setup)
+    handles = submit(eng, max_new=2)
+    while eng.sched.has_work:
+        eng.step()
+    req = eng._by_id[handles[0].request_id]
+    # forge a token event AFTER the terminal (bypassing _record_token's
+    # terminal-state guard, which is exactly what the sanitizer backstops)
+    saved = req.state
+    req.state = type(saved).DECODING
+    eng._emit(req, token=7)
+    req.state = saved
+    with pytest.raises(SanitizerError, match="no-token-after-terminal"):
+        eng.step()
+
+
+# ------------------------------------------------------------ clean runs
+
+def test_clean_run_counts_checks(setup):
+    eng = make_engine(setup)
+    submit(eng)
+    while eng.sched.has_work:
+        eng.step()
+    assert eng.sanitize_checks == eng.steps > 0
+    assert eng.internal_errors == 0
+    assert check_cache(eng.cache) == []
+    assert check_events(eng) == []
+
+
+def test_sanitizer_not_swallowed_by_backstop(setup):
+    """SanitizerError must escape step() even though step() swallows
+    everything else — corrupt state means stop, not internal_errors."""
+    eng = make_engine(setup)
+    submit(eng)
+    eng.step()
+    eng.cache.ref[mapped_page(eng)] += 1
+    before = eng.internal_errors
+    with pytest.raises(SanitizerError):
+        eng.step()
+    assert eng.internal_errors == before
