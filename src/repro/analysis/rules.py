@@ -528,7 +528,8 @@ def r5_counter_registry_drift(project: Project) -> list:
 # serving modules that must stay pure-host: they run inside the step's
 # failure-isolation boundary and in restore paths where no device (or a
 # different device topology) is present
-HOST_ONLY_MODULES = ("scheduler.py", "faults.py", "recovery.py")
+HOST_ONLY_MODULES = ("scheduler.py", "faults.py", "recovery.py",
+                     "speculation.py")
 
 
 @rule("R6", "host-device-boundary")

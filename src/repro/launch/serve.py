@@ -24,6 +24,15 @@ step-level isolation, and ``--snapshot-every N`` rides a journaled
 :class:`~repro.serving.recovery.RecoveryLog` along with the run (full
 engine snapshot every N steps + per-token event journal).
 
+``--speculation K`` turns on speculative multi-token decode on the
+unified path: every request carries ``SamplingParams.speculation=K``,
+the engine drafts K tokens per decode row from the prompt-lookup
+source and verifies them in one forward (greedy output stays bitwise
+identical to K=0). The summary's ``[sched] speculation:`` line reports
+drafted/accepted (acceptance rate), rollbacks, and the no-op/error
+counters; the ``[slo]`` line reports TTFT and TPOT mean + p95 over the
+finished requests.
+
 Replicated serving (``serving/replication.py``): ``--replicas N`` runs
 N engine replicas behind a :class:`ReplicaGroup` — least-loaded
 routing, per-step health checks, RecoveryLog artifact shipping —
@@ -59,6 +68,14 @@ from repro.configs.base import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh, parse_mesh_arg
 from repro.models.lm import LM, QuantConfig
 from repro.serving.engine import Engine, EngineConfig, SamplingParams
+
+
+def _ms_stats(xs: list) -> str:
+    """mean + p95 of a latency sample, formatted in ms (or 'n/a')."""
+    if not xs:
+        return "n/a"
+    arr = np.asarray(xs) * 1000.0
+    return f"mean {arr.mean():.1f}ms p95 {np.percentile(arr, 95):.1f}ms"
 
 
 def _group_ecfg(args) -> EngineConfig:
@@ -110,6 +127,7 @@ def _run_group(args, cfg, qparams, qaxes, quant, model: int):
                           size=args.shared_prefix).tolist()
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature, top_k=args.top_k,
+                        speculation=args.speculation,
                         deadline_ms=(args.deadline_ms or None),
                         ttft_ms=(args.ttft_ms or None))
     prompts = []
@@ -192,6 +210,13 @@ def main():
                     help="per-request SamplingParams.temperature (0=greedy)")
     ap.add_argument("--top-k", type=int, default=40,
                     help="per-request SamplingParams.top_k")
+    ap.add_argument("--speculation", type=int, default=0,
+                    help="per-request SamplingParams.speculation: draft "
+                         "K tokens per decode row from the prompt-lookup "
+                         "source and verify them in one forward (0 = "
+                         "off; greedy output is bitwise identical either "
+                         "way — K only changes how many forwards it "
+                         "takes)")
     ap.add_argument("--prefill-mode", default="chunked",
                     choices=["chunked", "whole"])
     ap.add_argument("--prefill-chunk", type=int, default=64,
@@ -347,6 +372,7 @@ def main():
               "grow the prefix", flush=True)
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature, top_k=args.top_k,
+                        speculation=args.speculation,
                         deadline_ms=(args.deadline_ms or None),
                         ttft_ms=(args.ttft_ms or None))
     prompts = []
@@ -408,6 +434,16 @@ def main():
           f"internal_errors={eng.internal_errors} "
           f"sanitize_checks={eng.sanitize_checks} "
           f"released={eng.sched.released_count}", flush=True)
+    # latency SLOs measured from the lifecycle stamps: TTFT from
+    # arrival to first token, TPOT over the decode window
+    ttft = [r.first_token_at - r.arrived_at
+            for r in finished if r.first_token_at]
+    tpot = [(r.finished_at - r.first_token_at) / (len(r.generated) - 1)
+            for r in finished
+            if r.finished_at and r.first_token_at and len(r.generated) > 1]
+    print(f"[slo] ttft {_ms_stats(ttft)} | tpot {_ms_stats(tpot)} "
+          f"(over {len(ttft)} first tokens / {len(tpot)} decode windows)",
+          flush=True)
     if eng.faults.faults:
         fired = [f"{p}:{a}@step{s}" for p, a, s in eng.faults.fired]
         print(f"[faults] armed: {eng.faults.describe()}; "
@@ -431,6 +467,14 @@ def main():
                   f"{eng.attn_work_items_per_shard} (balanced split of "
                   f"{eng.attn_work_items} over model={eng.tp_size})",
                   flush=True)
+    if args.speculation or eng.spec_draft_tokens:
+        acc = eng.spec_accepted_tokens / max(1, eng.spec_draft_tokens)
+        print(f"[sched] speculation: drafted={eng.spec_draft_tokens} "
+              f"accepted={eng.spec_accepted_tokens} (acceptance {acc:.0%}) "
+              f"rollback={eng.spec_rollback_tokens} "
+              f"noop={eng.spec_noop_count} "
+              f"draft_errors={eng.draft_errors} "
+              f"[{eng.draft_source.describe()}]", flush=True)
     for r in finished[:4]:
         print(f"  req {r.request_id}: {r.state.value:9s} "
               f"{r.generated[:12]}…", flush=True)

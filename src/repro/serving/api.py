@@ -92,6 +92,19 @@ class SamplingParams:
         ``stop_reason="ttft_budget"`` (an SLO guard — a request that
         cannot start in time should release the queue slot it is
         holding). ``None`` = no TTFT budget.
+    speculation: speculative-decode draft length k (0 = off, the
+        default). Each decode step the engine drafts up to k tokens
+        from its host-side draft source (n-gram prompt lookup by
+        default) and verifies them in ONE forward as a qlen-(k+1)
+        chunk; greedy verification is exact-match, so the emitted text
+        is identical to speculation-off, just in fewer forwards.
+        Stochastic requests verify by rejection sampling (the output
+        *distribution* is exact; the sampled text may differ from the
+        non-speculative sampler). Must fit the engine's per-step token
+        budget: ``Engine.submit`` rejects k + 1 >
+        ``prefill_chunk_tokens``. With ``max_new_tokens == 1`` (or one
+        token remaining) drafting silently no-ops — there is nothing
+        left to speculate (counted in ``Engine.spec_noop_count``).
     """
 
     max_new_tokens: int = 16
@@ -99,10 +112,13 @@ class SamplingParams:
     top_k: int = 40
     deadline_ms: Optional[float] = None
     ttft_ms: Optional[float] = None
+    speculation: int = 0
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.speculation < 0:
+            raise ValueError("speculation must be >= 0 (0 = off)")
         if self.temperature < 0.0:
             raise ValueError("temperature must be >= 0")
         if self.top_k < 1:

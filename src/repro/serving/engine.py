@@ -92,6 +92,41 @@ attends fp-queries-over-int4-history — a prompt's KV is never resident
 in fp beyond one chunk. Admission only needs pages for the next chunk
 and preemption can fire mid-prefill.
 
+**Speculative decode** (unified path; ``SamplingParams.speculation=k``).
+Decode amortizes the W4Ax weight pass over ONE token per request per
+forward — the bottleneck speculation attacks. Each step, a host-side
+:class:`~repro.serving.speculation.DraftSource` (default: deterministic
+n-gram prompt lookup over the request's prompt + generated history;
+pluggable seam for a draft model sharing the page pools) proposes up to
+k tokens per speculating decode row. The row then rides the SAME ragged
+forward as a qlen-(k+1) chunk — last sampled token + k drafts, int4
+paged history, in-flight KV fake-quantized like every decode token —
+through the same bucketed jit cache; no new kernel, no second forward.
+The head gathers logits at every chunk position of speculating rows
+(spec-off steps keep the historical one-logit-per-row layout
+bit-for-bit, so their jit cache entries are untouched), and
+verification walks them position-by-position: greedy rows accept on
+exact argmax match (emitted text is bitwise identical to
+speculation-off, just in fewer forwards — the fake-quantize contract
+makes a token's in-flight chunk KV equal the int4 page readback its
+non-speculative step would see); stochastic rows accept by exact
+rejection sampling against the deterministic point-mass proposal (the
+output distribution is unchanged). The first rejected position commits
+the corrected token; full acceptance commits a bonus token from the
+final logits — 1..k+1 tokens per step, emitted in order through the
+normal event stream. Unaccepted drafts roll back via the refcount/
+prefix-safe ``PagedKV4Cache.truncate_seq`` (pages return to their
+pre-draft baseline; the ``sanitize=True`` kv-length-consistency
+invariant pins the landing spot every step). Draft tokens debit the
+step's ``prefill_chunk_tokens`` budget so spec rows compete fairly with
+prefill chunks. Counters: ``spec_draft_tokens`` / ``spec_accepted_tokens``
+/ ``spec_rollback_tokens`` (acceptance rate in the serve CLI),
+``spec_noop_count`` (drafting suppressed with ≤1 token remaining),
+``draft_errors`` (a raising/garbage draft source degrades to plain
+decode — drafting is best-effort, never fatal). Fault points ``draft``
+and ``verify`` cover the new path; TP sharding is oblivious to it (a
+spec row is just another chunk).
+
 **Benchmark baselines** (Fig. 11): ``unified_step=False`` splits the
 step back into a ragged prefill forward plus a separate decode forward
 (the PR-2 dataflow); ``prefill_mode="whole"`` runs one O(T²) fp forward
@@ -180,6 +215,7 @@ from repro.serving.jit_args import argnums_of
 from repro.serving.kv_cache import PagedKV4Cache, PagedKV4Config
 from repro.serving.sanitize import check_engine
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.speculation import DraftSource, PromptLookupDraft
 
 __all__ = ["Engine", "EngineConfig", "SamplingParams", "RequestState",
            "RequestOutput", "RequestHandle"]
@@ -188,6 +224,47 @@ __all__ = ["Engine", "EngineConfig", "SamplingParams", "RequestState",
 def _bucket(n: int, lo: int = 1) -> int:
     """Round ``n`` up to a power of two (≥ lo) — the jit-cache shape key."""
     return max(lo, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _spec_probs(row: np.ndarray, temp: float, top_k: int) -> np.ndarray:
+    """Top-k/temperature sampling distribution for one logits row
+    (float64 host softmax — the speculative verifier's reference
+    measure)."""
+    lg = np.asarray(row, np.float64) / max(temp, 1e-8)
+    if top_k < lg.shape[0]:
+        kth = np.partition(lg, -top_k)[-top_k]
+        lg = np.where(lg >= kth, lg, -np.inf)
+    lg = lg - lg.max()
+    p = np.exp(lg)
+    return p / p.sum()
+
+
+def _reject_sample(row: np.ndarray, temp: float, top_k: int,
+                   drafted: Optional[int], rid: int, pos: int):
+    """Exact rejection sampling against a DETERMINISTIC draft proposal.
+
+    The prompt-lookup draft is a point mass q = δ(drafted), so the
+    textbook accept probability min(1, p/q) collapses to p(drafted) and
+    the residual distribution to p restricted to x ≠ drafted,
+    renormalized — together they reproduce p exactly, which is the
+    speculative-sampling guarantee. ``drafted=None`` (the bonus
+    position after full acceptance) is a plain draw from p. Seeded by
+    (request_id, position) like the batched sampler, so reruns replay.
+    Returns (token, accepted)."""
+    p = _spec_probs(row, temp, top_k)
+    rng = np.random.default_rng((int(rid) & 0x7FFFFFFF, int(pos), 0x5BEC))
+    if drafted is not None:
+        if rng.random() < p[drafted]:
+            return int(drafted), True
+        residual = p.copy()
+        residual[drafted] = 0.0
+        mass = residual.sum()
+        if mass <= 0.0:
+            # p WAS the point mass at the draft — the residual is empty
+            # and the only exact outcome is the drafted token
+            return int(drafted), True
+        p = residual / mass
+    return int(rng.choice(p.shape[0], p=p)), False
 
 
 def _pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
@@ -333,7 +410,7 @@ class Engine:
         # rebuilt by __init__ / only meaningful in-process
         "lm", "params", "donate_pools", "_fwd", "_fwd_shapes",
         "_sample_fns", "_gather_bcast", "_param_pspecs", "_scale_pspec",
-        "_events",
+        "_events", "draft_source",
         # per-process observability counters
         "peak_prefill_fp_tokens", "interleaved_steps", "forward_calls",
         "trace_count", "prefix_hit_tokens", "prefill_tokens",
@@ -341,12 +418,15 @@ class Engine:
         "rejected_count", "callback_errors", "internal_errors",
         "last_error", "sanitize_checks", "attn_work_items",
         "attn_grid_items", "attn_dense_grid_items", "attn_forwards",
-        "attn_work_items_per_shard",
+        "attn_work_items_per_shard", "spec_draft_tokens",
+        "spec_accepted_tokens", "spec_rollback_tokens", "spec_noop_count",
+        "draft_errors",
     })
 
     def __init__(self, cfg: ModelConfig, qparams, quant: QuantConfig,
                  ecfg: EngineConfig = EngineConfig(), *,
-                 mesh=None, param_axes=None, faults=None, clock=time.time):
+                 mesh=None, param_axes=None, faults=None, clock=time.time,
+                 draft_source: Optional[DraftSource] = None):
         """``mesh``/``param_axes`` (both optional) turn on tensor-parallel
         sharded serving: a ``(data, model)`` mesh whose "model" axis > 1
         shards projection weights and the int4 KV pools over kv heads
@@ -360,7 +440,10 @@ class Engine:
         hand one in directly; ``ecfg.inject_faults`` builds one from the
         CLI spec grammar). ``clock``: the wall-clock source for arrival
         stamps and deadline enforcement — injectable so deadline tests
-        are deterministic."""
+        are deterministic. ``draft_source``: the speculative-decode
+        proposal oracle (serving/speculation.py) — defaults to n-gram
+        :class:`PromptLookupDraft`; only consulted for requests with
+        ``SamplingParams.speculation > 0``."""
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine supports dense/moe; {cfg.family} serves via "
@@ -424,6 +507,19 @@ class Engine:
         self.last_error: Optional[str] = None
         # step boundaries that passed the runtime sanitizer (ecfg.sanitize)
         self.sanitize_checks = 0
+        # speculative decode: the pluggable host-side draft oracle and
+        # its acceptance accounting — drafted/accepted give the
+        # acceptance rate, rollback counts the int4 KV retracted by
+        # truncate_seq, spec_noop_count the drafts suppressed because
+        # ≤1 token remained, draft_errors the raising/garbage draft
+        # calls degraded to plain decode
+        self.draft_source = (draft_source if draft_source is not None
+                             else PromptLookupDraft())
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_rollback_tokens = 0
+        self.spec_noop_count = 0
+        self.draft_errors = 0
         # attention-schedule counters (fig10 measured ablation): real
         # work items (Σ real pages + chunk items, per kv head — equal
         # under both schedules), grid items actually launched (dense:
@@ -556,6 +652,19 @@ class Engine:
         if params is None:
             params = SamplingParams(temperature=self.ecfg.temperature,
                                     top_k=self.ecfg.top_k)
+        if params.speculation + 1 > self.ecfg.prefill_chunk_tokens:
+            # the verify chunk is k drafts + the last sampled token; a k
+            # that cannot fit the per-step token budget could never ride
+            # one forward — reject at submit, not silently mid-step
+            raise ValueError(
+                f"speculation={params.speculation} exceeds the per-step "
+                f"token budget: the k+1-token verify chunk must fit "
+                f"prefill_chunk_tokens={self.ecfg.prefill_chunk_tokens}")
+        if params.speculation > 0 and params.max_new_tokens == 1:
+            # a single-token request never decodes (its one token comes
+            # off the prefill's logits), so speculation can never engage
+            # — a silent no-op worth counting, not an error
+            self.spec_noop_count += 1
         if request_id is None:
             while self._next_id in self._by_id:
                 self._next_id += 1
@@ -751,6 +860,8 @@ class Engine:
             if req.terminal_emitted:
                 return
             req.terminal_emitted = True
+            if not req.finished_at:     # TPOT window end (serve CLI SLOs)
+                req.finished_at = self.clock()
         out = RequestOutput(
             request_id=req.request_id, state=req.state, token=token,
             num_generated=len(req.generated), stop_reason=req.stop_reason,
@@ -873,9 +984,14 @@ class Engine:
 
         Decode slots are reserved *before* the prefill plan: reservation
         can preempt a mid-prefill victim, which would invalidate a plan
-        built earlier."""
+        built earlier. Speculative drafts are planned between the two —
+        they need the reserved slots to size their verify chunks, and
+        their token count debits the prefill budget so spec rows compete
+        fairly with prompt chunks for the step's forward."""
         decode = self._reserve_decode_slots(
             [r for r in self.sched.running if r.prefilled and not r.done])
+        drafts = self._plan_speculation(decode, budget)
+        budget = max(1, budget - sum(len(d) for d in drafts))
         plan = self.sched.plan_prefill(self.cache, budget)
         if not plan and not decode:
             # no forward possible: if prompts are stuck with nothing
@@ -886,7 +1002,65 @@ class Engine:
             return
         if plan and decode:
             self.interleaved_steps += 1
-        self._forward_step(plan, decode)
+        self._forward_step(plan, list(zip(decode, drafts)))
+
+    def _plan_speculation(self, decode: list[Request],
+                          budget: int) -> list[list[int]]:
+        """Plan one draft per decode row (aligned list; ``[]`` = plain
+        one-token decode). Pure host work: consult the draft source,
+        clamp k to the tokens the request can still commit and to the
+        step budget (one token is held back for prefill progress while
+        any prompt is mid-stream), validate the proposal, and grow the
+        row's page capacity to cover its k+1-token verify chunk —
+        trimming the draft instead of preempting anyone when the pool
+        is short (drafts are opportunistic; they must never evict real
+        work). A raising draft source — or an injected ``draft`` fault
+        — degrades to no-draft and counts ``draft_errors``."""
+        drafts: list[list[int]] = [[] for _ in decode]
+        if not any(r.params is not None and r.params.speculation > 0
+                   for r in decode):
+            return drafts
+        avail = budget - 1 if any(not r.prefilled
+                                  for r in self.sched.running) else budget
+        for i, r in enumerate(decode):
+            k = r.params.speculation if r.params is not None else 0
+            if k <= 0:
+                continue
+            remaining = r.max_new_tokens - len(r.generated)
+            if remaining <= 1:
+                # at most one token left to commit: a draft would be
+                # guaranteed rollback, so speculation no-ops
+                self.spec_noop_count += 1
+                continue
+            k = min(k, remaining - 1, avail)
+            if k <= 0:
+                continue
+            try:
+                fault = self.faults.check("draft")
+                if fault is not None and fault.action == "raise":
+                    raise InjectedFault("draft: injected draft failure")
+                d = ([] if fault is not None
+                     else list(self.draft_source.draft(
+                         r.prompt, r.generated, k))[:k])
+                if any(not 0 <= int(t) < self.cfg.vocab_size for t in d):
+                    raise ValueError(f"draft token out of vocab: {d}")
+            except Exception as e:  # noqa: BLE001 — draft oracles are
+                # untrusted; degradation to plain decode, never fatal
+                self.draft_errors += 1
+                self.last_error = f"draft: {e!r}"
+                d = []
+            if not d:
+                continue
+            # page capacity for the verify chunk (ctx + last token + k
+            # drafts); the pool decides how much speculation it backs
+            ctx = int(self.cache.seq_len[r.seq_slot])
+            cap = self.cache.grow_to(r.seq_slot, ctx + 1 + len(d))
+            d = [int(t) for t in d[:max(0, cap - ctx - 1)]]
+            if d:
+                drafts[i] = d
+                avail -= len(d)
+                self.spec_draft_tokens += len(d)
+        return drafts
 
     def _step_split(self, admitted: list[Request], chunked: bool,
                     budget: int):
@@ -1022,16 +1196,20 @@ class Engine:
     # --------------------------------------------------- unified one-forward
 
     def _forward_step(self, plan: list[tuple[Request, int, int]],
-                      decode: list[Request]):
+                      decode: list[tuple[Request, list]]):
         """Pack prompt-chunk rows and decode rows into ONE ragged forward.
 
         A decode row is a chunk of 1 (its last sampled token) whose paged
         history is the whole sequence so far — the same
         fp-queries-over-int4-history contract the prefill kernel already
-        serves, so the union needs no second attention dataflow. The
-        packed layout is bucketed (powers of two) so repeated steps hit
-        the jit cache; padding tokens scatter to out-of-range pages
-        (dropped) and pad rows have qlen 0 (masked).
+        serves, so the union needs no second attention dataflow. A
+        SPECULATING decode row (``decode`` pairs each request with its
+        planned draft, possibly empty) is the same thing with qlen
+        1+k: last sampled token + k drafted tokens, verified from the
+        chunk's per-position logits after the forward. The packed layout
+        is bucketed (powers of two) so repeated steps hit the jit cache;
+        padding tokens scatter to out-of-range pages (dropped) and pad
+        rows have qlen 0 (masked).
 
         Failure isolation: everything from destination resolution
         through the forward runs under a guard — an exception there
@@ -1042,10 +1220,12 @@ class Engine:
         only moves AFTER the forward succeeds, so ``free_seq`` on a
         quarantined row returns the pools to baseline. After the
         forward, a per-row non-finite guard fails exactly the rows
-        whose logits are NaN/Inf, and the sampler runs under its own
-        guard (rows mid-prefill are never touched by either)."""
+        whose logits are NaN/Inf (a spec row checks its whole verify
+        chunk), and the sampler/verifier run under their own guards
+        (rows mid-prefill are never touched by either)."""
         rows = list(plan) + [
-            (r, int(self.cache.seq_len[r.seq_slot]), 1) for r in decode]
+            (r, int(self.cache.seq_len[r.seq_slot]), 1 + len(d))
+            for r, d in decode]
         starts = np.asarray([s for _, s, _ in rows])
         takes = np.asarray([t for _, _, t in rows])
         slots = np.asarray([r.seq_slot for r, _, _ in rows])
@@ -1058,50 +1238,82 @@ class Engine:
         tok_pos = starts[tok_seq] + tok_off            # absolute positions
         tokens = np.concatenate(
             [np.asarray(r.prompt[s:s + t]) for r, s, t in plan]
-            + [[r.generated[-1]] for r in decode]).astype(np.int64)
+            + [[r.generated[-1]] + d for r, d in decode]).astype(np.int64)
+        # logit slots: by default one per row (its LAST packed token —
+        # exactly the historical cum[1:]-1 layout, so spec-off steps
+        # reuse their jit cache entries bit-for-bit); a speculating row
+        # contributes every chunk position, since verification needs
+        # logits at each drafted token
+        nplan = len(plan)
+        slot0: list[int] = []
+        logit_idx: list[int] = []
+        for si in range(nseq):
+            slot0.append(len(logit_idx))
+            if si >= nplan and takes[si] > 1:
+                logit_idx.extend(range(int(cum[si]), int(cum[si + 1])))
+            else:
+                logit_idx.append(int(cum[si + 1]) - 1)
         try:
             logits, nan_fault = self._guarded_forward(
                 plan, rows, starts, takes, slots, nseq, cmax, ttot, cum,
-                tok_seq, tok_off, tok_pos, tokens)
+                tok_seq, tok_off, tok_pos, tokens,
+                np.asarray(logit_idx))
         except Exception as e:  # noqa: BLE001 — batch-granular quarantine
+            # drafts die with the batch: counted as rollbacks so
+            # drafted == accepted + rollback stays conserved under faults
+            self.spec_rollback_tokens += sum(len(d) for _, d in decode)
             for r, _, _ in rows:
                 self._fail(r, f"forward: {e!r}")
             return
 
         # host state: prompt progress + decode appends; a completed
-        # prompt publishes its full pages into the prefix index
+        # prompt publishes its full pages into the prefix index.
+        # Speculating rows do NOT advance here — their resident length
+        # is decided by verification (accepted prefix) via truncate_seq
         for r, s, t in plan:
             r.prefill_pos = s + t
             self.cache.seq_len[r.seq_slot] = r.prefill_pos
             if self.ecfg.prefix_caching and r.prefill_pos == len(r.prompt):
                 self.cache.publish_prefix(r.seq_slot, r.prompt)
-        self.cache.advance([r.seq_slot for r in decode])
+        self.cache.advance([r.seq_slot for r, d in decode if not d])
 
-        # one vectorized sample over finished-prefill rows ∪ decode rows
-        need = [(si, r, len(r.prompt))
+        # one vectorized sample over finished-prefill rows ∪ plain
+        # decode rows; speculating rows verify per-position afterwards
+        need = [(slot0[si], r, len(r.prompt))
                 for si, (r, s, t) in enumerate(plan)
                 if s + t == len(r.prompt)]
-        need += [(len(plan) + j, r, r.total_len)
-                 for j, r in enumerate(decode)]
-        if not need:
+        need += [(slot0[nplan + j], r, r.total_len)
+                 for j, (r, d) in enumerate(decode) if not d]
+        spec = [(slot0[nplan + j], r, int(starts[nplan + j]), d)
+                for j, (r, d) in enumerate(decode) if d]
+        if not need and not spec:
             return
         if nan_fault is not None:
-            # injected NaN lands on a row actually being sampled (row
-            # clamped into `need`), so the schedule reliably exercises
-            # the guard below
-            logits[need[min(nan_fault.row, len(need) - 1)][0], :] = np.nan
+            # injected NaN lands on a row actually being consumed (row
+            # clamped into the sampled/verified slots), so the schedule
+            # reliably exercises the guards below
+            sampled = ([si for si, _, _ in need]
+                       + [s0 for s0, _, _, _ in spec])
+            logits[sampled[min(nan_fault.row, len(sampled) - 1)], :] = \
+                np.nan
         # per-row non-finite guard: a NaN/Inf logits row — injected or
         # real — quarantines exactly that request; finite rows sample on
-        finite = np.isfinite(
-            logits[[si for si, _, _ in need]]).all(axis=-1)
-        if not finite.all():
-            for (_, r, _), ok in zip(need, finite):
-                if not ok:
-                    self._fail(r, "non_finite_logits")
-            need = [t for t, ok in zip(need, finite) if ok]
-            if not need:
-                return
-        self._sample_rows(logits, need)
+        if need:
+            finite = np.isfinite(
+                logits[[si for si, _, _ in need]]).all(axis=-1)
+            if not finite.all():
+                for (_, r, _), ok in zip(need, finite):
+                    if not ok:
+                        self._fail(r, "non_finite_logits")
+                need = [t for t, ok in zip(need, finite) if ok]
+        if need:
+            self._sample_rows(logits, need)
+        for s0, r, ctx, d in spec:
+            if np.isfinite(logits[s0:s0 + len(d) + 1]).all():
+                self._verify_row(logits, s0, r, ctx, d)
+            else:
+                self.spec_rollback_tokens += len(d)
+                self._fail(r, "non_finite_logits")
 
     def _sample_rows(self, logits: np.ndarray, need: list):
         """Guarded batched sampling: a sampler exception (or injected
@@ -1121,17 +1333,97 @@ class Engine:
         for (_, r, _), tok in zip(need, toks):
             self._record_token(r, tok)
 
+    def _verify_row(self, logits: np.ndarray, s0: int, r: Request,
+                    ctx: int, draft: list):
+        """Commit one speculating row's verified prefix.
+
+        The forward already wrote KV for the WHOLE 1+k chunk (last
+        sampled token + k drafts) at positions [ctx, ctx+k]; the walk
+        over the chunk's per-position logits decides how much of it was
+        real. ``truncate_seq`` lands the row's resident length at
+        ctx + len(committed) FIRST — retracting rejected drafts' KV
+        (refcount/prefix-safe) and advancing over accepted ones in one
+        move — and only then do the committed tokens emit, so a
+        reentrant ``abort()`` from an ``on_event`` callback mid-loop
+        finds page accounting already consistent. A verification
+        failure (or an injected ``verify`` fault) quarantines exactly
+        this request; the rest of the batch keeps its step."""
+        if r.seq_slot < 0 or r.state.terminal:
+            # reentrant abort earlier in this step's loop — the draft
+            # died with the request's pages; count it rolled back
+            self.spec_rollback_tokens += len(draft)
+            return
+        try:
+            if self.faults.check("verify"):
+                raise InjectedFault("verify: injected verifier failure")
+            committed, accepted = self._verify_tokens(logits, s0, r, draft)
+            self.cache.truncate_seq(r.seq_slot, ctx + len(committed))
+        except Exception as e:  # noqa: BLE001 — row-granular quarantine
+            self.spec_rollback_tokens += len(draft)
+            self._fail(r, f"verify: {e!r}")
+            return
+        self.spec_accepted_tokens += accepted
+        self.spec_rollback_tokens += len(draft) - accepted
+        for tok in committed:
+            self._record_token(r, tok)
+
+    def _verify_tokens(self, logits: np.ndarray, s0: int, r: Request,
+                       draft: list):
+        """Walk the verify chunk's logits; return (committed, accepted).
+
+        Position i of the chunk is conditioned on the last sampled
+        token plus drafts 0..i-1, so its logits row is EXACTLY what a
+        plain decode step would have produced after committing those
+        drafts. Greedy (the serving default): argmax each row; a match
+        accepts the draft and moves on, the first mismatch commits the
+        corrected token and stops — bitwise the tokens speculation-off
+        greedy would emit, just several per forward. Stochastic:
+        point-mass rejection sampling per position (accept draft w.p.
+        p(draft), else draw the renormalized residual) — the committed
+        tokens are distributed exactly as i.i.d. draws from each
+        position's sampling distribution. Either way the row after the
+        last accepted draft yields one bonus token, so a verified step
+        always commits ≥ 1 token. ``accepted`` counts draft tokens
+        kept (the acceptance-rate numerator)."""
+        p = r.params
+        temp = p.temperature if p is not None else self.ecfg.temperature
+        top_k = min(p.top_k if p is not None else self.ecfg.top_k,
+                    logits.shape[1])
+        remaining = r.max_new_tokens - len(r.generated)
+        committed: list[int] = []
+        accepted = 0
+        i = 0
+        while i <= len(draft) and len(committed) < remaining:
+            row = logits[s0 + i]
+            drafted = int(draft[i]) if i < len(draft) else None
+            if temp <= 0.0:
+                tok, ok = int(np.argmax(row)), False
+                ok = drafted is not None and tok == drafted
+            else:
+                tok, ok = _reject_sample(row, temp, top_k, drafted,
+                                         r.request_id, r.total_len + i)
+            committed.append(tok)
+            if not ok:
+                break
+            accepted += 1
+            i += 1
+        return committed, accepted
+
     def _guarded_forward(self, plan, rows, starts, takes, slots, nseq,
                          cmax, ttot, cum, tok_seq, tok_off, tok_pos,
-                         tokens):
+                         tokens, logit_idx):
         """The fault-guarded section of :meth:`_forward_step`:
         destination resolution (the ``append_kv`` fault point), shape
         bucketing, and the ONE forward (the ``forward`` fault point —
         ``raise`` aborts here; ``nan`` returns the armed fault so the
-        caller corrupts a sampled row). Returns (writable logits
-        ndarray, nan_fault). No host scheduler/cache bookkeeping moves
-        in here — an exception leaves page accounting untouched, so the
-        caller's quarantine frees back to baseline."""
+        caller corrupts a sampled row). ``logit_idx`` lists the packed
+        token indices whose logits the caller consumes (one per row
+        unless a row speculates, then all its chunk positions); its own
+        bucket ``lb`` joins the jit-cache key, and collapses to the
+        historical ``nb`` whenever no row speculates. Returns (writable
+        logits ndarray [lb, V], nan_fault). No host scheduler/cache
+        bookkeeping moves in here — an exception leaves page accounting
+        untouched, so the caller's quarantine frees back to baseline."""
         pages_np, offs_np = self.cache.token_dests_np(slots[tok_seq],
                                                       tok_pos)
         # shape buckets — the jit cache key
@@ -1213,7 +1505,9 @@ class Engine:
             jnp.asarray(tables),
             jnp.asarray(_pad_to(starts, nb)),          # ctx per row
             jnp.asarray(_pad_to(takes, nb)),           # qlens per row
-            jnp.asarray(_pad_to(cum[1:] - 1, nb)),     # last token per row
+            # consumed logit slots, own bucket (== nb when nothing
+            # speculates — the historical last-token-per-row layout)
+            jnp.asarray(_pad_to(logit_idx, _bucket(len(logit_idx)))),
             jnp.asarray(desc_np),                      # wq work items
             self.cache.k_scale, self.cache.k_zero,
             self.cache.v_scale, self.cache.v_zero)
@@ -1230,13 +1524,15 @@ class Engine:
         """The jitted unified forward (one trace per shape bucket).
 
         tokens/positions/pages/offs/tseq/toff/dq_mask: [Tb] int32 packed
-        layout; block_tables: [Nb, NPb]; ctx/qlens/last_idx: [Nb];
+        layout; block_tables: [Nb, NPb]; ctx/qlens: [Nb]; last_idx:
+        [Lb] consumed logit slots (== [Nb] last-token-per-row when no
+        row speculates, else every spec chunk position too);
         work_items: [Wb, 4] flat Stream-K descriptors (the attention
         shape key under ``schedule="work_queue"`` — block_tables is a
         [Nb, 1] dummy there; under "dense" the roles swap);
         k_scale/k_zero/v_scale/v_zero: the cache's static per-channel
         int4 scales [Hkv, 1, D] (explicit args so ``shard_map`` can hand
-        each shard its head slice). Returns (logits [Nb, V] f32, k_pool,
+        each shard its head slice). Returns (logits [Lb, V] f32, k_pool,
         v_pool) — pools updated with the step's quantized KV.
 
         Single device: runs :meth:`_unified_body` directly. TP: wraps

@@ -33,6 +33,21 @@ Fault points (the names the engine/cache fire):
   ``raise`` simulates a throwing client callback (the engine detaches
   the callback and keeps the request alive — the event log is intact).
 
+Two points cover the speculative-decode path (grouped in
+``SPEC_FAULT_POINTS``, kept OUT of ``ENGINE_FAULT_POINTS`` so seeded
+schedules built before they existed replay unchanged):
+
+* ``draft``       — every draft-source invocation in
+  ``Engine._plan_speculation``. ``raise`` simulates a blowing-up draft
+  oracle (the engine counts ``draft_errors`` and degrades to plain
+  one-token decode — drafting is best-effort, never fatal); ``empty``
+  makes the source politely propose nothing (pure degradation, no
+  error).
+* ``verify``      — once per speculating row's verification in
+  ``Engine._verify_row``; ``raise`` quarantines exactly that request
+  (pages released to baseline, drafted KV retracted with them) while
+  the rest of the batch keeps decoding.
+
 Two points model *process-level* failures (consulted by the layers
 wrapping the engine, never by ``Engine.step`` itself):
 
@@ -51,7 +66,9 @@ the CLI spec grammar (:meth:`FaultInjector.from_spec`, e.g.
 ``"forward:step=3,action=nan;alloc_page:nth=20"``), and seeded random
 mixes for chaos sweeps (:meth:`FaultInjector.random_schedule` — drawn
 from the five in-engine points only, so pre-existing seeded schedules
-are stable; pass ``points=`` to include the process-level ones).
+are stable; pass ``points=`` to include the speculative-decode and/or
+process-level ones, e.g. ``ENGINE_FAULT_POINTS + SPEC_FAULT_POINTS``
+for the chaos sweeps covering speculation).
 
 Each armed fault fires exactly once. ``hits`` counts every consultation
 per point and ``fired`` records what actually tripped (point, action,
@@ -67,14 +84,20 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["Fault", "FaultInjector", "InjectedFault", "FAULT_POINTS",
-           "ENGINE_FAULT_POINTS"]
+           "ENGINE_FAULT_POINTS", "SPEC_FAULT_POINTS"]
 
 # the five points Engine.step/PagedKV4Cache consult directly
 ENGINE_FAULT_POINTS = ("alloc_page", "forward", "sample", "append_kv",
                        "emit_event")
+# the speculative-decode points (Engine._plan_speculation /
+# Engine._verify_row) — a separate group, NOT folded into
+# ENGINE_FAULT_POINTS, so seeded random_schedule draws from before
+# speculation existed still replay bit-for-bit
+SPEC_FAULT_POINTS = ("draft", "verify")
 # plus the process-level points consulted by the wrapping layers
 # (ReplicaGroup / RecoveryLog)
-FAULT_POINTS = ENGINE_FAULT_POINTS + ("crash", "snapshot_write")
+FAULT_POINTS = ENGINE_FAULT_POINTS + SPEC_FAULT_POINTS + (
+    "crash", "snapshot_write")
 
 # legal actions per point (first entry = the default)
 _ACTIONS = {
@@ -83,6 +106,8 @@ _ACTIONS = {
     "sample": ("raise",),
     "append_kv": ("raise",),
     "emit_event": ("raise",),
+    "draft": ("raise", "empty"),
+    "verify": ("raise",),
     "crash": ("kill",),
     "snapshot_write": ("torn",),
 }

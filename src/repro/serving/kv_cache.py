@@ -431,6 +431,39 @@ class PagedKV4Cache:
         self.page_count[seq_id] = have
         return have * self.pcfg.page_size
 
+    def truncate_seq(self, seq_id: int, new_len: int) -> int:
+        """Set the sequence's resident length to ``new_len`` tokens,
+        releasing every page past ``pages_needed(new_len)`` — the
+        speculative-decode rollback: a verify chunk scatters int4 KV
+        for the whole k+1-token draft, and the unaccepted tail is
+        retracted here, pages returning to their pre-draft baseline.
+
+        Refcount/prefix-safe by construction: pages drop through the
+        same :meth:`_release_page` path ``free_seq`` uses, so a shared
+        (adopted) page survives for its other owners and a *published*
+        page reaching ref==0 parks on the reclaimable LRU — still
+        matchable — instead of the free list. ``new_len`` may also sit
+        PAST ``seq_len`` (up to the page-backed capacity): the spec
+        path writes KV beyond ``seq_len`` during verification and then
+        lands the accepted length here in one move. Stale int4 bytes
+        past ``new_len`` stay in the kept pages — attention masks by
+        ``seq_len`` and the next append overwrites them. Returns the
+        number of page references dropped."""
+        if seq_id not in self.active:
+            raise ValueError(f"truncate_seq: seq {seq_id} not active")
+        have = int(self.page_count[seq_id])
+        if not 0 <= new_len <= have * self.pcfg.page_size:
+            raise ValueError(
+                f"truncate_seq: new_len={new_len} outside the page-backed "
+                f"range [0, {have * self.pcfg.page_size}] of seq {seq_id}")
+        keep = self.pages_needed(new_len)
+        for i in range(keep, have):
+            self._release_page(int(self.block_table[seq_id, i]))
+            self.block_table[seq_id, i] = -1
+        self.page_count[seq_id] = min(have, keep)
+        self.seq_len[seq_id] = new_len
+        return max(0, have - keep)
+
     def free_seq(self, seq_id: int):
         """Drop the sequence's references. Private pages return to the
         free list; shared pages survive for their other owners; published

@@ -24,6 +24,17 @@ Invariants checked (see ``docs/invariants.md``):
 - **no-token-after-terminal** — a terminal event is the LAST event; no
   token event may carry ``finished=True``; a request's token-event count
   never exceeds its lifetime ``emitted`` cursor.
+- **emitted-position-monotonic** — a request's token events advance
+  ``num_generated`` by exactly one per event (restarting at 1 only
+  after a preemption fold): multi-token speculative commits must emit
+  in order, never duplicating or skipping a position.
+- **kv-length-consistency** — after every step, each running request's
+  resident KV length equals its committed tokens: mid-prefill,
+  ``seq_len == prefill_pos``; decoding, ``seq_len == total_len - 1``
+  (every committed token except the newest has resident KV — the
+  newest is written by its next forward). Speculative rollback
+  (``truncate_seq``) must land sequences exactly here; a leaked or
+  over-retracted draft token trips this immediately.
 """
 
 from __future__ import annotations
@@ -31,7 +42,7 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["SanitizerError", "check_engine", "check_cache",
-           "check_events"]
+           "check_events", "check_positions"]
 
 
 class SanitizerError(AssertionError):
@@ -128,13 +139,58 @@ def check_events(engine) -> list:
             problems.append(f"no-token-after-terminal: request {rid} "
                             f"logged {tokens} token events but its "
                             f"lifetime emitted cursor is {req.emitted}")
+        nums = [ev.num_generated for ev in req.events
+                if ev.token is not None]
+        for a, b in zip(nums, nums[1:]):
+            if b != a + 1 and b != 1:
+                problems.append(
+                    f"emitted-position-monotonic: request {rid} token "
+                    f"events jump num_generated {a} -> {b} (must advance "
+                    f"by exactly one, or restart at 1 after a preemption "
+                    f"fold)")
+                break
+    return problems
+
+
+def check_positions(engine) -> list:
+    """KV-length ↔ committed-token agreement for every running request.
+
+    The invariant speculative rollback must restore: a decoding
+    request's newest committed token has NO resident KV yet (its next
+    forward writes it), every older one does — so ``seq_len`` is
+    exactly ``total_len - 1``. Mid-prefill, ``seq_len`` tracks the
+    chunk cursor ``prefill_pos``. Checked over ``sched.running`` only:
+    waiting/preempted requests hold no slot, terminal ones no pages."""
+    problems = []
+    cache = engine.cache
+    for req in engine.sched.running:
+        rid, slot = req.request_id, req.seq_slot
+        if slot < 0:
+            problems.append(f"kv-length-consistency: running request "
+                            f"{rid} holds no seq slot")
+            continue
+        ln = int(cache.seq_len[slot])
+        if not req.prefilled:
+            if ln != req.prefill_pos:
+                problems.append(
+                    f"kv-length-consistency: request {rid} mid-prefill "
+                    f"has kv len {ln} but prefill_pos {req.prefill_pos}")
+            continue
+        want = req.total_len - 1 if req.generated else len(req.prompt)
+        if ln != want:
+            problems.append(
+                f"kv-length-consistency: request {rid} has kv len {ln} "
+                f"but {req.total_len} committed tokens (expected {want}: "
+                f"every committed token except the newest has resident "
+                f"KV)")
     return problems
 
 
 def check_engine(engine) -> None:
     """Assert every step-boundary invariant; raise on the first batch of
     violations. Called by ``Engine.step()`` when ``ecfg.sanitize``."""
-    problems = check_cache(engine.cache) + check_events(engine)
+    problems = (check_cache(engine.cache) + check_events(engine)
+                + check_positions(engine))
     if problems:
         raise SanitizerError(
             f"step {engine.steps}: {len(problems)} sanitizer "

@@ -72,6 +72,10 @@ class Request:
     prefill_pos: int = 0           # prompt tokens already through the model
     stop_reason: Optional[str] = None   # None = ran to max_new_tokens
     first_token_at: float = 0.0    # wall clock of first generated token
+    finished_at: float = 0.0       # wall clock of the terminal event —
+    #                                with first_token_at this brackets
+    #                                the decode window, so the serve CLI
+    #                                derives TTFT/TPOT without polling
     params: Optional[SamplingParams] = None   # None → engine defaults
     state: RequestState = RequestState.QUEUED
     cached_tokens: int = 0         # prefix-cache hit tokens, last admission
@@ -403,6 +407,7 @@ class Scheduler:
             "max_new_tokens": r.max_new_tokens,
             "arrived_at": r.arrived_at,
             "first_token_at": r.first_token_at,
+            "finished_at": r.finished_at,
             "cached_tokens": r.cached_tokens,
             "emitted": r.emitted,
             "uid": r.uid,
@@ -423,6 +428,7 @@ class Scheduler:
             max_new_tokens=e["max_new_tokens"],
             arrived_at=e.get("arrived_at", 0.0),
             first_token_at=e.get("first_token_at", 0.0),
+            finished_at=e.get("finished_at", 0.0),
             cached_tokens=e.get("cached_tokens", 0),
             emitted=e.get("emitted", 0),
             uid=e.get("uid", -1),

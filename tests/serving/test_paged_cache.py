@@ -311,3 +311,120 @@ def test_acquire_pressure_eviction_counts():
     assert cache.allocate_seq(1, 8)             # needs both pages → evict
     assert cache.prefix_evicted_pages == 1
     assert cache.prefix_reclaimable_bytes == 0
+
+
+# ------------------------------------------ truncate_seq (spec rollback)
+
+
+def test_truncate_releases_tail_pages_and_sets_len():
+    """The basic rollback move: a verify chunk grew the sequence past
+    its committed length; truncate drops the tail pages, updates the
+    O(1) page_count, and lands seq_len — all consistent with the
+    block-table row."""
+    cache = make_prefix_cache(num_pages=8, page_size=4)
+    assert cache.allocate_seq(0, 16)            # 4 pages
+    cache.seq_len[0] = 16
+    assert cache.truncate_seq(0, 6) == 2        # 4 pages → 2
+    assert int(cache.seq_len[0]) == 6
+    assert int(cache.page_count[0]) == 2
+    np.testing.assert_array_equal(cache.page_count, table_counts(cache))
+    assert cache.pages_free == 6
+    # idempotent at a page boundary: nothing more to drop
+    assert cache.truncate_seq(0, 5) == 0
+    assert int(cache.page_count[0]) == 2
+
+
+def test_truncate_may_raise_seq_len_within_backing():
+    """new_len past seq_len is legal up to the page-backed capacity:
+    the spec path scatters KV beyond seq_len during verification and
+    lands the accepted length in one truncate call."""
+    cache = make_prefix_cache(num_pages=8, page_size=4)
+    assert cache.allocate_seq(0, 10)            # 3 pages = 12 tokens backed
+    cache.seq_len[0] = 7
+    assert cache.truncate_seq(0, 11) == 0       # advance, no release
+    assert int(cache.seq_len[0]) == 11
+    assert int(cache.page_count[0]) == 3
+
+
+def test_truncate_then_regrow_reuses_freed_pages():
+    """Released tail pages go back to the pool and grow_to can take
+    them again — the draft/verify/rollback cycle doesn't leak."""
+    cache = make_prefix_cache(num_pages=4, page_size=4)
+    assert cache.allocate_seq(0, 16)            # whole pool
+    cache.seq_len[0] = 16
+    cache.truncate_seq(0, 4)                    # 3 pages released
+    assert cache.pages_free == 3
+    assert cache.grow_to(0, 16) == 16           # regrown from the pool
+    np.testing.assert_array_equal(cache.page_count, table_counts(cache))
+    cache.free_seq(0)
+    assert cache.pages_free == 4 and len(cache.free_pages) == 4
+
+
+def test_truncate_errors_inactive_and_out_of_range():
+    cache = make_prefix_cache()
+    try:
+        cache.truncate_seq(0, 0)
+        assert False, "inactive seq must be rejected"
+    except ValueError as e:
+        assert "not active" in str(e)
+    assert cache.allocate_seq(0, 8)             # 2 pages = 8 tokens backed
+    for bad in (-1, 9):
+        try:
+            cache.truncate_seq(0, bad)
+            assert False, f"new_len={bad} outside page backing must raise"
+        except ValueError as e:
+            assert "page-backed range" in str(e)
+    # state untouched by the rejected calls
+    assert int(cache.page_count[0]) == 2 and int(cache.seq_len[0]) == 0
+
+
+def test_truncate_shared_prefix_pages_survive_for_owner():
+    """Rollback on an adopting sequence drops only ITS references:
+    shared prefix pages keep serving the publisher (ref 2 → 1) and stay
+    matchable; only the adopter's private tail page is truly freed."""
+    cache = make_prefix_cache(num_pages=8, page_size=4)
+    tokens = list(range(1, 9))                  # 2 full pages
+    assert cache.allocate_seq(0, 8)
+    cache.seq_len[0] = 8
+    cache.publish_prefix(0, tokens)
+    pages, matched = cache.match_prefix(tokens + [99])
+    assert matched == 8
+    assert cache.allocate_seq(1, 12, prefix_pages=pages, prefix_tokens=8)
+    cache.seq_len[1] = 12
+    assert (cache.ref[np.asarray(pages)] == 2).all()
+    # roll the adopter all the way back into the shared prefix
+    assert cache.truncate_seq(1, 5) == 1        # private page dropped
+    assert (cache.ref[np.asarray(pages)] == 2).all()  # still co-owned
+    assert cache.truncate_seq(1, 2) == 1        # drops one SHARED page
+    assert cache.ref[pages[0]] == 2 and cache.ref[pages[1]] == 1
+    # the publisher's view is untouched
+    assert int(cache.seq_len[0]) == 8
+    assert cache.match_prefix(tokens + [99])[1] == 8
+    cache.free_seq(1)
+    cache.free_seq(0)
+    assert cache.pages_free == 8
+
+
+def test_truncate_published_page_parks_on_reclaimable_lru():
+    """A published page whose last reference is dropped BY TRUNCATE
+    parks on the reclaimable LRU exactly like free_seq: counted free,
+    still matchable, revivable by a later adopter."""
+    cache = make_prefix_cache(num_pages=8, page_size=4)
+    tokens = list(range(1, 9))
+    assert cache.allocate_seq(0, 8)
+    cache.seq_len[0] = 8
+    cache.publish_prefix(0, tokens)
+    assert cache.truncate_seq(0, 4) == 1        # published page, ref 1 → 0
+    assert cache.pages_free == 7                # counted free...
+    assert len(cache.free_pages) == 6           # ...but parked, not freed
+    # the parked page stays MATCHABLE: its KV is intact until evicted
+    assert cache.match_prefix(tokens + [99])[1] == 8
+    # a new adopter revives the parked page off the LRU (ref 0 → 1);
+    # the page still co-owned by seq 0 just gains a reference
+    pages, m = cache.match_prefix(tokens + [77])
+    assert m == 8
+    assert cache.allocate_seq(1, 9, prefix_pages=pages, prefix_tokens=8)
+    assert cache.ref[pages[0]] == 2 and cache.ref[pages[1]] == 1
+    cache.free_seq(0)
+    cache.free_seq(1)
+    assert cache.pages_free == 8

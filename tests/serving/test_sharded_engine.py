@@ -124,6 +124,38 @@ def test_sharded_dense_schedule_parity(model):
     assert e2.forward_calls == e2.steps
 
 
+def test_sharded_speculation_parity(model):
+    """Speculative decode under TP: the verify chunk (qlen 1+k decode
+    row) rides the sharded forward, and greedy output stays bitwise
+    identical to single-device spec-off — drafts change the step
+    count, never the tokens."""
+    from repro.serving.engine import SamplingParams
+    # greedy decode on THIS model (head_dim=64 reshapes the random
+    # weights) takes a few tokens to fall into its absorbing cycles,
+    # so give it cycle-prone prompts and enough output length
+    prompts = [[188] * 12, [49] * 8, [188] * 10]
+    out = []
+    for mesh, k in ((None, 0), (make_local_mesh(1, TP), 0),
+                    (make_local_mesh(1, TP), 4)):
+        eng = _engine(model, mesh, sanitize=True)
+        for i, p in enumerate(prompts):
+            eng.submit(p, SamplingParams(max_new_tokens=20,
+                                         temperature=0.0, speculation=k),
+                       request_id=i)
+        done = eng.run(max_steps=300)
+        toks = {r.request_id: list(r.generated) for r in done}
+        out.append((eng, toks))
+    (e1, t1), (e2, t2), (e3, t3) = out
+    assert e3.tp_size == TP
+    assert t2 == t1 and t3 == t1
+    assert e3.spec_draft_tokens > 0 and e3.spec_accepted_tokens > 0
+    assert e3.spec_draft_tokens == \
+        e3.spec_accepted_tokens + e3.spec_rollback_tokens
+    assert e3.steps < e2.steps          # drafts actually shrank the run
+    for eng in (e1, e2, e3):
+        assert eng.internal_errors == 0
+
+
 def test_sharded_requires_param_axes(model):
     """mesh without param_axes cannot place weights — loud error, not
     a silently replicated (wrong-counter) engine."""

@@ -1,0 +1,351 @@
+"""Speculative multi-token decode on the unified paged path.
+
+The contract under test, end to end:
+
+* **Exactness** — greedy output with ``SamplingParams.speculation=k``
+  is BITWISE identical to speculation-off, across decode-only, mixed
+  prefill+decode, preempt-resume, and both attention schedules, with
+  the step-boundary sanitizers on and ``internal_errors == 0``. The
+  draft source only decides how many forwards the run takes.
+* **Prompt-lookup drafting** — the host-side n-gram source proposes
+  continuations of the trailing context n-gram, preferring the most
+  recent match with a FULL k-token continuation (a most-recent-only
+  rule clips to the context tail and starves acceptance).
+* **Budget + validation** — drafts debit the step's prefill token
+  budget, ``speculation < 0`` and drafts that could never fit a step
+  are rejected up front, and ``max_new_tokens=1`` silently no-ops
+  (counter, not error).
+* **Fault isolation** — the ``draft`` point degrades to plain decode
+  (``draft_errors`` counted, output unchanged); the ``verify`` point
+  quarantines exactly the speculating request; seeded chaos sweeps
+  over ``ENGINE_FAULT_POINTS + SPEC_FAULT_POINTS`` uphold every
+  serving invariant.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.lm import LM, QuantConfig
+from repro.serving.api import RequestState, SamplingParams
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.faults import (ENGINE_FAULT_POINTS, SPEC_FAULT_POINTS,
+                                  Fault, FaultInjector)
+from repro.serving.speculation import DraftSource, PromptLookupDraft
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3_8b")
+    qc = QuantConfig(weight_only=True, kv4=True, impl="ref")
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(0))
+    qparams, _ = LM(cfg, quant=qc).quantize(params, axes)
+    return cfg, qc, qparams
+
+
+def make_engine(setup, faults=None, **kw):
+    cfg, qc, qparams = setup
+    defaults = dict(max_batch=6, num_pages=128, page_size=8,
+                    max_pages_per_seq=32, prefill_chunk_tokens=24,
+                    kv_range=4.0, unified_step=True, sanitize=True)
+    defaults.update(kw)
+    ekw = {"faults": faults} if faults is not None else {}
+    return Engine(cfg, qparams, qc, EngineConfig(**defaults), **ekw)
+
+
+def run_spec(setup, prompts, max_new, k, faults=None, **kw):
+    eng = make_engine(setup, faults=faults, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(p, SamplingParams(max_new_tokens=max_new,
+                                     temperature=0.0, speculation=k),
+                   request_id=i)
+    done = eng.run(max_steps=500)
+    # compare the EMITTED token stream, not req.generated: a preemption
+    # folds generated tokens into the prompt, so the post-fold tail is
+    # all `generated` retains — the event log is the lifetime output
+    return eng, {r.request_id: [e.token for e in r.events
+                                if e.token is not None] for r in done}
+
+
+# repetitive prompts: the smoke model's greedy decode cycles, so
+# prompt-lookup acceptance is high and the verify path commits real
+# multi-token runs
+REPETITIVE = [[188] * 8, [139, 133, 188, 188] * 2, [188] * 12]
+
+
+# ------------------------------------------------ prompt-lookup draft source
+
+
+def test_pld_full_continuation():
+    d = PromptLookupDraft()
+    # trailing [3] matched at index 1 with a full 3-token continuation
+    assert d.draft([1, 3, 4, 5, 6], [3], 3) == [4, 5, 6]
+
+
+def test_pld_prefers_full_continuation_over_recent_clip():
+    """A run of repeats: the most RECENT match of the trailing n-gram
+    sits at the context tail with a clipped continuation; the draft
+    must reach back to the match that yields all k tokens."""
+    d = PromptLookupDraft()
+    ctx = [7] * 10
+    assert d.draft(ctx, [], 4) == [7, 7, 7, 7]
+
+
+def test_pld_falls_back_to_longest_partial():
+    d = PromptLookupDraft()
+    # only match of trailing [2] is near the end: 2-token continuation
+    assert d.draft([1, 2, 8, 9], [2], 4) == [8, 9, 2]
+
+
+def test_pld_no_match_and_k0():
+    d = PromptLookupDraft()
+    assert d.draft([1, 2, 3, 4], [5], 3) == []
+    assert d.draft([1, 2, 1, 2], [1], 0) == []
+
+
+def test_pld_ngram_backoff():
+    """No 3- or 2-gram match → backs off to the unigram match."""
+    d = PromptLookupDraft(max_ngram=3, min_ngram=1)
+    assert d.draft([9, 4, 1, 2, 3], [9], 2) == [4, 1]
+
+
+def test_pld_is_host_only():
+    import repro.serving.speculation as spec
+    assert "jax" not in dir(spec) and "jnp" not in dir(spec)
+
+
+# --------------------------------------------------------- exact-greedy parity
+
+
+@pytest.mark.parametrize("sched", ["work_queue", "dense"])
+def test_spec_greedy_parity_repetitive(setup, sched):
+    """The favorable workload: high acceptance, several tokens per
+    forward — and bitwise-identical greedy output."""
+    e0, o0 = run_spec(setup, REPETITIVE, 24, 0, attention_schedule=sched)
+    e4, o4 = run_spec(setup, REPETITIVE, 24, 4, attention_schedule=sched)
+    assert o4 == o0
+    assert e0.internal_errors == 0 and e4.internal_errors == 0
+    assert e4.forward_calls < e0.forward_calls
+    assert e4.spec_accepted_tokens > e4.steps          # >1 accepted/step
+    assert e4.spec_draft_tokens == (e4.spec_accepted_tokens
+                                    + e4.spec_rollback_tokens)
+
+
+def test_spec_greedy_parity_mixed_prefill_decode(setup):
+    """Random ragged prompts stream in while repetitive rows decode with
+    drafts: spec rows, plain decode rows, and prefill chunks share the
+    forward, and the output must not move."""
+    cfg = setup[0]
+    rng = np.random.default_rng(1)
+    prompts = REPETITIVE + [rng.integers(1, cfg.vocab_size, n).tolist()
+                            for n in (40, 23)]
+    e0, o0 = run_spec(setup, prompts, 8, 0)
+    e4, o4 = run_spec(setup, prompts, 8, 4)
+    assert o4 == o0
+    assert e0.internal_errors == 0 and e4.internal_errors == 0
+    assert e4.spec_draft_tokens > 0
+
+
+def test_spec_greedy_parity_preempt_resume(setup):
+    """Page pressure forces preemption mid-run: folded prompts resume
+    and the speculating engine still matches speculation-off exactly."""
+    e0, o0 = run_spec(setup, REPETITIVE, 24, 0, num_pages=10, max_batch=3)
+    e4, o4 = run_spec(setup, REPETITIVE, 24, 4, num_pages=10, max_batch=3)
+    assert o4 == o0
+    assert e0.internal_errors == 0 and e4.internal_errors == 0
+    # pressure actually materialized — in BOTH arms
+    assert e0.sched.preemptions > 0 and e4.sched.preemptions > 0
+
+
+def test_spec_stochastic_sampling_completes(setup):
+    """Rejection sampling path (temperature > 0): distributions aren't
+    asserted here (that's the verifier's rejection-sampling algebra),
+    but the lifecycle must hold: full-length outputs, clean counters,
+    sanitizers green."""
+    eng = make_engine(setup)
+    for i, p in enumerate(REPETITIVE):
+        eng.submit(p, SamplingParams(max_new_tokens=12, temperature=0.8,
+                                     top_k=8, speculation=3),
+                   request_id=i)
+    done = eng.run(max_steps=500)
+    assert eng.internal_errors == 0
+    assert len(done) == len(REPETITIVE)
+    assert all(len(r.generated) == 12 for r in done)
+    assert eng.spec_draft_tokens == (eng.spec_accepted_tokens
+                                     + eng.spec_rollback_tokens)
+
+
+def test_spec_emits_tokens_in_order(setup):
+    """A multi-token commit must stream as consecutive single-token
+    events — num_generated advancing by exactly one per event."""
+    evs = []
+    eng = make_engine(setup)
+    eng.submit(REPETITIVE[0], SamplingParams(max_new_tokens=16,
+                                             temperature=0.0,
+                                             speculation=4),
+               on_event=evs.append)
+    eng.run(max_steps=200)
+    nums = [e.num_generated for e in evs if e.token is not None]
+    assert nums == list(range(1, len(nums) + 1))
+    assert len(nums) == 16
+
+
+# ------------------------------------------------------- validation + budget
+
+
+def test_speculation_param_validation():
+    with pytest.raises(ValueError, match="speculation"):
+        SamplingParams(speculation=-1)
+
+
+def test_submit_rejects_oversized_speculation(setup):
+    eng = make_engine(setup, prefill_chunk_tokens=4)
+    with pytest.raises(ValueError, match="speculation"):
+        eng.submit([1, 2, 3], SamplingParams(speculation=4))
+
+
+def test_single_token_request_noops_speculation(setup):
+    """max_new_tokens=1 + speculation: a draft would be guaranteed
+    rollback, so the engine silently skips drafting and counts it."""
+    eng, out = run_spec(setup, [REPETITIVE[0]], 1, 4)
+    assert len(out[0]) == 1
+    assert eng.spec_draft_tokens == 0
+    assert eng.spec_noop_count >= 1
+
+
+def test_drafts_debit_prefill_budget(setup):
+    """With a prompt mid-prefill, drafted tokens shrink the prefill
+    chunk: total packed tokens per forward stay bounded by the step
+    budget (prefill_chunk_tokens)."""
+    cfg = setup[0]
+    budget = 24
+    eng = make_engine(setup, prefill_chunk_tokens=budget)
+    seen = []
+    orig = eng._forward_step
+
+    def spy(plan, decode):
+        seen.append(sum(t for _, _, t in plan)
+                    + sum(1 + len(d) for _, d in decode))
+        return orig(plan, decode)
+
+    eng._forward_step = spy
+    eng.submit(REPETITIVE[0], SamplingParams(max_new_tokens=16,
+                                             temperature=0.0,
+                                             speculation=8), request_id=0)
+    eng.step()          # prefill the repetitive prompt
+    long_prompt = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, 60).tolist()
+    eng.submit(long_prompt, SamplingParams(max_new_tokens=2,
+                                           temperature=0.0), request_id=1)
+    eng.run(max_steps=200)
+    assert eng.spec_draft_tokens > 0
+    assert max(seen) <= budget
+    assert eng.internal_errors == 0
+
+
+# --------------------------------------------------------------- fault points
+
+
+def test_draft_fault_degrades_to_plain_decode(setup):
+    """A raising draft source is never fatal: the row decodes one token
+    as if speculation were off, the error is counted, output unchanged."""
+    _, baseline = run_spec(setup, REPETITIVE, 12, 0)
+    fi = FaultInjector([Fault("draft", nth=1, action="raise"),
+                        Fault("draft", nth=3, action="empty")])
+    eng, out = run_spec(setup, REPETITIVE, 12, 4, faults=fi)
+    assert out == baseline
+    assert eng.draft_errors == 1            # raise counted, empty not
+    assert eng.internal_errors == 0
+    assert {p for p, _, _ in fi.fired} == {"draft"}
+
+
+def test_broken_draft_source_counted_not_fatal(setup):
+    class Exploding(DraftSource):
+        def draft(self, prompt, generated, k):
+            raise RuntimeError("boom")
+
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=6, num_pages=128, page_size=8,
+                              max_pages_per_seq=32,
+                              prefill_chunk_tokens=24, kv_range=4.0,
+                              unified_step=True, sanitize=True),
+                 draft_source=Exploding())
+    eng.submit(REPETITIVE[0], SamplingParams(max_new_tokens=8,
+                                             temperature=0.0,
+                                             speculation=4))
+    done = eng.run(max_steps=200)
+    assert len(done) == 1 and len(done[0].generated) == 8
+    assert eng.draft_errors > 0 and eng.internal_errors == 0
+    assert eng.spec_draft_tokens == 0
+
+
+def test_out_of_vocab_draft_rejected(setup):
+    class Liar(DraftSource):
+        def draft(self, prompt, generated, k):
+            return [10 ** 9] * k
+
+    cfg, qc, qparams = setup
+    eng = Engine(cfg, qparams, qc,
+                 EngineConfig(max_batch=6, num_pages=128, page_size=8,
+                              max_pages_per_seq=32,
+                              prefill_chunk_tokens=24, kv_range=4.0,
+                              unified_step=True, sanitize=True),
+                 draft_source=Liar())
+    eng.submit(REPETITIVE[0], SamplingParams(max_new_tokens=8,
+                                             temperature=0.0,
+                                             speculation=4))
+    done = eng.run(max_steps=200)
+    assert len(done) == 1 and len(done[0].generated) == 8
+    assert eng.draft_errors > 0 and eng.spec_draft_tokens == 0
+
+
+def test_verify_fault_quarantines_one_request(setup):
+    """An injected verify failure fails exactly the speculating request
+    — drafted KV retracted with its pages — while the rest drain."""
+    fi = FaultInjector([Fault("verify", nth=1, action="raise")])
+    eng, out = run_spec(setup, REPETITIVE, 12, 4, faults=fi)
+    failed = [r for r in eng.sched.finished
+              if r.state == RequestState.FAILED]
+    assert len(failed) == 1
+    assert "verify" in failed[0].stop_reason
+    finished = [r for r in eng.sched.finished
+                if r.state == RequestState.FINISHED]
+    assert len(finished) == len(REPETITIVE) - 1
+    assert all(len(r.generated) == 12 for r in finished)
+    assert eng.internal_errors == 0
+    assert eng.cache.pages_free == 128      # quarantine freed to baseline
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_chaos_with_spec_points(setup, seed):
+    """Seeded chaos over the engine AND speculative fault points
+    ('draft'/'verify' riding with alloc_page/forward/sample/append_kv/
+    emit_event), speculation armed on every request: step() never
+    raises, pages return to baseline, the event contract holds."""
+    cfg = setup[0]
+    fi = FaultInjector.random_schedule(
+        seed, points=ENGINE_FAULT_POINTS + SPEC_FAULT_POINTS)
+    eng = make_engine(setup, faults=fi, num_pages=64)
+    rng = np.random.default_rng(seed)
+    prompts = [REPETITIVE[seed % len(REPETITIVE)],
+               rng.integers(1, cfg.vocab_size, 12).tolist(),
+               REPETITIVE[(seed + 1) % len(REPETITIVE)]]
+    sink = []
+    for i, p in enumerate(prompts):
+        eng.submit(p, SamplingParams(max_new_tokens=int(rng.integers(3, 9)),
+                                     temperature=0.7 if i == 1 else 0.0,
+                                     top_k=8, speculation=3),
+                   on_event=sink.append if i == 0 else None)
+    eng.run(max_steps=400)
+    assert not eng.sched.has_work
+    assert eng.cache.pages_free == 64
+    assert (eng.cache.ref == 0).all()
+    assert eng.internal_errors == 0, eng.last_error
+    for req in eng._by_id.values():
+        assert req.state.terminal
+        terminals = [e for e in req.events if e.finished]
+        assert len(terminals) == 1 and req.events[-1].finished
+    assert eng.spec_draft_tokens == (eng.spec_accepted_tokens
+                                     + eng.spec_rollback_tokens)
